@@ -1,0 +1,54 @@
+"""Paper Fig. 7: solver runtime scaling on random matrices up to
+128 x 128 x 8-bit, vs the O(N^2 log^2 N) asymptote (N = m^2 * bw).
+
+Our pure-Python+numpy implementation carries a constant-factor penalty
+vs the paper's Numba JIT; the *scaling exponent* is the reproduction
+target (fit printed at the end).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import solve_cmvm
+
+
+def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    spent = 0.0
+    for m in sizes:
+        if spent > budget_s:
+            break
+        mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
+        t0 = time.perf_counter()
+        sol = solve_cmvm(mat, dc=-1)
+        dt = time.perf_counter() - t0
+        spent += dt
+        rows.append({"m": m, "N": m * m * bw, "seconds": dt, "adders": sol.n_adders})
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if len(rows) >= 3:
+        logn = np.log([r["N"] for r in rows])
+        logt = np.log([r["seconds"] for r in rows])
+        slope = np.polyfit(logn, logt, 1)[0]
+    else:
+        slope = float("nan")
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(
+                f"fig7_m{r['m']},{r['seconds']*1e6:.0f},"
+                f"N={r['N']};adders={r['adders']}"
+            )
+        print(f"fig7_scaling_exponent,0,slope={slope:.2f};paper~2.0-2.3")
+    return rows, slope
+
+
+if __name__ == "__main__":
+    main()

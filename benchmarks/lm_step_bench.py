@@ -1,0 +1,61 @@
+"""LM-framework microbench: wall-clock train/decode steps on the smoke
+configs (CPU) — catches performance regressions in the substrate and
+exercises the full train_step/serve path end to end."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import RunConfig
+from repro.models import decode_step, init_params
+from repro.models.transformer import prefill
+from repro.train.train_lib import make_train_step
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run(archs=("smollm-135m", "qwen3-moe-30b-a3b", "falcon-mamba-7b", "jamba-v0.1-52b")):
+    rows = []
+    for name in archs:
+        cfg = configs.get_smoke(name)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        batch = {
+            "tokens": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (4, 64), 0, cfg.vocab_size),
+        }
+        step_fn, opt_init = make_train_step(cfg, RunConfig(master_dtype=None))
+        jitted = jax.jit(step_fn)
+        opt = opt_init(params)
+        t_train = _time(lambda p, o, b: jitted(p, o, b, 0)[2]["loss"], params, opt, batch)
+
+        lg, cache = jax.jit(lambda p, b: prefill(cfg, p, b, 96))(params, batch)
+        dec = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+        tok = jnp.argmax(lg, -1)[:, None]
+        t_dec = _time(lambda p, t, c: dec(p, t, c)[0], params, tok, cache)
+        rows.append({"arch": name, "train_step_ms": t_train * 1e3, "decode_ms": t_dec * 1e3})
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"lm_train_{r['arch']},{r['train_step_ms']*1e3:.0f},decode_ms={r['decode_ms']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    table2_random_matrices  Table 2  (adders/depth/runtime vs H_cmvm)
+    table3_4_resources      Tables 3-4 (resource proxies, 8/4-bit)
+    tables5_12_networks     Tables 5-12 (network-level DA vs latency)
+    fig7_runtime_scaling    Fig. 7 (solver runtime scaling)
+    lm_step_bench           framework substrate microbench
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline numbers live in
+EXPERIMENTS.md (derived from the dry-run, see repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from . import (
+        fig7_runtime_scaling,
+        lm_step_bench,
+        table2_random_matrices,
+        table3_4_resources,
+        tables5_12_networks,
+    )
+
+    mods = {
+        "table2": table2_random_matrices,
+        "table34": table3_4_resources,
+        "networks": tables5_12_networks,
+        "fig7": fig7_runtime_scaling,
+        "lm": lm_step_bench,
+    }
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        print(f"# --- {name} ({mod.__name__}) ---", flush=True)
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

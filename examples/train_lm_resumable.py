@@ -1,0 +1,48 @@
+"""Fault-tolerant LM training driver: train a ~small LM for a few hundred
+steps with periodic async checkpoints, then kill and resume mid-run.
+
+    PYTHONPATH=src python examples/train_lm_resumable.py
+"""
+
+import shutil
+import tempfile
+
+import jax
+
+from repro import configs
+from repro.configs.base import RunConfig
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import init_params
+from repro.train.train_lib import Trainer, make_train_step
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+cfg = configs.get_smoke("stablelm-3b", d_model=128, n_layers=4, d_ff=256)
+run_cfg = RunConfig(
+    learning_rate=3e-3, warmup_steps=20,
+    checkpoint_every=50, checkpoint_dir=ckpt_dir, keep_checkpoints=2,
+)
+pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=0))
+step_fn, opt_init = make_train_step(cfg, run_cfg)
+jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+
+print(f"training {cfg.name} ({cfg.param_count():,} params), ckpts -> {ckpt_dir}")
+trainer = Trainer.resume_or_init(cfg, run_cfg, pipe, init_fn, jit_step, opt_init)
+
+# phase 1: run 120 steps, then simulate a pod loss at step 90
+boom = {"armed": True}
+def fail_hook(step):
+    if step == 90 and boom["armed"]:
+        boom["armed"] = False
+        raise RuntimeError("simulated: pod 1 lost heartbeat")
+
+m = trainer.run(120, fail_hook=fail_hook)
+print(f"phase 1 done at step {trainer.step}: loss {m['loss']:.3f} "
+      f"(survived 1 simulated failure, resumed from checkpoint)")
+
+# phase 2: a *new* Trainer (fresh process semantics) resumes seamlessly
+trainer2 = Trainer.resume_or_init(cfg, run_cfg, pipe, init_fn, jit_step, opt_init)
+assert trainer2.step == 120, trainer2.step
+m = trainer2.run(80)
+print(f"phase 2 (restart) done at step {trainer2.step}: loss {m['loss']:.3f}")
+shutil.rmtree(ckpt_dir, ignore_errors=True)

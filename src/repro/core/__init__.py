@@ -1,0 +1,46 @@
+"""da4ml core: distributed-arithmetic CMVM optimization (the paper's
+primary contribution), hardware-independent.
+
+Public API:
+    solve_cmvm        two-stage da4ml optimizer -> Solution (DAIS program)
+    naive_adder_tree  hls4ml 'latency'-strategy baseline in the same units
+    QInterval         quantized-interval fixed-point bookkeeping
+    DAISProgram/Term  SSA shift-add IR
+    decompose         stage-1 graph decomposition (M = M1 @ M2)
+    pipeline          greedy register insertion
+    emit_verilog      standalone RTL generation
+"""
+
+from .csd import csd_nnz, csd_span, from_csd, to_csd, vector_csd_nnz
+from .cost import adder_cost, ceil_log2, min_tree_depth, overlap_bits
+from .cse import CSE
+from .dais import DAISProgram, Term
+from .fixed_point import QInterval
+from .graph_decompose import Decomposition, decompose
+from .pipelining import PipelineReport, pipeline
+from .solver import Solution, naive_adder_tree, solve_cmvm
+from .verilog import emit_verilog
+
+__all__ = [
+    "CSE",
+    "DAISProgram",
+    "Decomposition",
+    "PipelineReport",
+    "QInterval",
+    "Solution",
+    "Term",
+    "adder_cost",
+    "ceil_log2",
+    "csd_nnz",
+    "csd_span",
+    "decompose",
+    "emit_verilog",
+    "from_csd",
+    "min_tree_depth",
+    "naive_adder_tree",
+    "overlap_bits",
+    "pipeline",
+    "solve_cmvm",
+    "to_csd",
+    "vector_csd_nnz",
+]

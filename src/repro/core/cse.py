@@ -1,0 +1,352 @@
+"""Stage 2 of da4ml: cost-aware two-term common subexpression elimination.
+
+Operates on the CSD digit tensor of an integer coefficient matrix whose
+rows are *existing program values* (inputs, or stage-1 intermediates).
+State (paper §4.4):
+
+  * ``M_expr`` — sparse digit storage, per output column a dict
+    ``{(row, bit_pos): digit}`` with digit in {-1, +1};
+  * ``L_impl`` — the DAIS program rows (implemented values).
+
+Each update step selects a two-term subexpression — canonical four-tuple
+``(i, j, s, sign)`` encoding ``u = (x_i << max(0,-s)) + sign * (x_j <<
+max(0,s))`` — and implements it, replacing every occurrence's digit pair
+with a single digit on the new row.
+
+Key differences from prior art that this module reproduces:
+
+  * subexpressions are matched across *different power-of-two scalings*
+    (relative shift ``s`` is part of the key, not a uniform row/column
+    shift as in MCMT [13]) and across *signed digits* (``sign`` in key),
+    unlike Scalable CMVM [57];
+  * selection is most-frequent-first, O(|L_impl|) per step via a cached
+    frequency table (a lazy max-heap here), not the O(|L_impl|^2)
+    one-step-lookahead of [4, 14] — the paper measures the lookahead is
+    worth <2% adders;
+  * frequency is weighted by the *operand bit overlap* (paper §4.4): the
+    cost model (Eq. 1) prefers operands with similar bitwidths/shifts, but
+    weighting by full cost would reward half-adder overhead bits; overlap
+    weighting is the paper's compromise;
+  * a delay constraint is enforced per output column: a replacement is
+    rejected if the column's minimal achievable merge-tree depth would
+    exceed its budget.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .cost import min_tree_depth, overlap_bits
+from .csd import to_csd
+from .dais import DAISProgram, Term
+
+# ----------------------------------------------------------------------
+# Pattern keys
+# ----------------------------------------------------------------------
+# Canonical key (i, j, s, sign): rows i <= j in program order; when i == j,
+# s > 0.  Digit pair ((i, p), (j, p + s)) with product sign realises
+#   d_i * 2^min(p, p+s) * u,   u = (x_i << max(0,-s)) + sign*(x_j << max(0,s))
+
+
+def _canon_key(r1: int, p1: int, d1: int, r2: int, p2: int, d2: int):
+    if (r1, p1) > (r2, p2):
+        r1, p1, d1, r2, p2, d2 = r2, p2, d2, r1, p1, d1
+    return (r1, r2, p2 - p1, d1 * d2)
+
+
+@dataclass
+class CSEStats:
+    n_patterns_implemented: int = 0
+    n_occurrences_replaced: int = 0
+    n_rejected_by_depth: int = 0
+    n_assembly_adders: int = 0
+
+
+class CSE:
+    def __init__(
+        self,
+        prog: DAISProgram,
+        coeff_cols: list[dict[int, int]],
+        budgets: Optional[list[Optional[int]]] = None,
+        weighted: bool = True,
+        assembly_dedup: bool = True,
+        depth_weight: float = 0.0,
+    ) -> None:
+        self.prog = prog
+        self.budgets = budgets if budgets is not None else [None] * len(coeff_cols)
+        self.weighted = weighted
+        self.assembly_dedup = assembly_dedup
+        # beyond-paper: under tight delay budgets, prefer subexpressions
+        # with shallow operands (they leave headroom for further reuse
+        # before the per-output depth budget binds):
+        # priority /= (1 + depth_weight * max(depth_a, depth_b))
+        self.depth_weight = depth_weight
+        self.stats = CSEStats()
+
+        # Sparse digit state: per column, {(row, pos): digit}
+        self.cols: list[dict[tuple[int, int], int]] = []
+        for col in coeff_cols:
+            digits: dict[tuple[int, int], int] = {}
+            for row, coeff in col.items():
+                if coeff == 0:
+                    continue
+                csd = to_csd(np.array([coeff]))[0]
+                for pos in np.nonzero(csd)[0]:
+                    digits[(row, int(pos))] = int(csd[pos])
+            self.cols.append(digits)
+
+        # Frequency machinery
+        self.counts: dict[tuple, int] = {}
+        self.pattern_cols: dict[tuple, dict[int, int]] = {}
+        self.heap: list[tuple[float, int, tuple]] = []
+        self._seq = 0
+        self._weights: dict[tuple, float] = {}
+        self._impl_cache: dict[tuple, int] = {}
+        self._combine_cache: dict[tuple, Term] = {}
+
+        self._build_initial_counts()
+
+    # ------------------------------------------------------------------
+    # Weights (static per key: operand qints are fixed at row creation)
+    # ------------------------------------------------------------------
+    def _weight(self, key: tuple) -> float:
+        w = self._weights.get(key)
+        if w is None:
+            i, j, s, _sign = key
+            w = 1.0
+            if self.weighted:
+                qa = self.prog.rows[i].qint
+                qb = self.prog.rows[j].qint
+                w = float(overlap_bits(qa, qb, max(0, -s), max(0, s)) + 1)
+            if self.depth_weight:
+                d = max(self.prog.rows[i].depth, self.prog.rows[j].depth)
+                w = w / (1.0 + self.depth_weight * d)
+            self._weights[key] = w
+        return w
+
+    # ------------------------------------------------------------------
+    # Frequency table construction and maintenance
+    # ------------------------------------------------------------------
+    def _build_initial_counts(self) -> None:
+        for c, digits in enumerate(self.cols):
+            if len(digits) < 2:
+                continue
+            items = list(digits.items())
+            n = len(items)
+            rows = np.fromiter((it[0][0] for it in items), dtype=np.int64, count=n)
+            poss = np.fromiter((it[0][1] for it in items), dtype=np.int64, count=n)
+            digs = np.fromiter((it[1] for it in items), dtype=np.int64, count=n)
+            ii, jj = np.triu_indices(n, k=1)
+            r1, r2 = rows[ii], rows[jj]
+            p1, p2 = poss[ii], poss[jj]
+            d1, d2 = digs[ii], digs[jj]
+            # canonical order: (row, pos) lexicographic
+            swap = (r1 > r2) | ((r1 == r2) & (p1 > p2))
+            r1s = np.where(swap, r2, r1)
+            r2s = np.where(swap, r1, r2)
+            p1s = np.where(swap, p2, p1)
+            p2s = np.where(swap, p1, p2)
+            s = p2s - p1s
+            sg = d1 * d2
+            # pack keys for np.unique
+            packed = (((r1s << 21) | r2s) << 16 | (s + (1 << 14))) << 1 | (sg > 0)
+            uniq, cnt = np.unique(packed, return_counts=True)
+            for k_packed, k_cnt in zip(uniq.tolist(), cnt.tolist()):
+                sign = 1 if (k_packed & 1) else -1
+                rest = k_packed >> 1
+                s_v = (rest & 0xFFFF) - (1 << 14)
+                rest >>= 16
+                key = (rest >> 21, rest & ((1 << 21) - 1), s_v, sign)
+                self.counts[key] = self.counts.get(key, 0) + k_cnt
+                self.pattern_cols.setdefault(key, {})[c] = (
+                    self.pattern_cols.setdefault(key, {}).get(c, 0) + k_cnt
+                )
+        for key, cnt in self.counts.items():
+            if cnt >= 2:
+                self._push(key, cnt)
+
+    def _push(self, key: tuple, cnt: int) -> None:
+        heapq.heappush(self.heap, (-cnt * self._weight(key), self._seq, key))
+        self._seq += 1
+
+    def _inc(self, key: tuple, c: int) -> None:
+        n = self.counts.get(key, 0) + 1
+        self.counts[key] = n
+        pc = self.pattern_cols.setdefault(key, {})
+        pc[c] = pc.get(c, 0) + 1
+        if n >= 2:
+            self._push(key, n)
+
+    def _dec(self, key: tuple, c: int) -> None:
+        n = self.counts[key] - 1
+        if n:
+            self.counts[key] = n
+        else:
+            del self.counts[key]
+        pc = self.pattern_cols[key]
+        if pc[c] == 1:
+            del pc[c]
+            if not pc:
+                del self.pattern_cols[key]
+        else:
+            pc[c] -= 1
+
+    def _remove_digit(self, c: int, row: int, pos: int) -> None:
+        digits = self.cols[c]
+        d = digits.pop((row, pos))
+        for (r2, p2), d2 in digits.items():
+            self._dec(_canon_key(row, pos, d, r2, p2, d2), c)
+
+    def _add_digit(self, c: int, row: int, pos: int, d: int) -> None:
+        digits = self.cols[c]
+        for (r2, p2), d2 in digits.items():
+            self._inc(_canon_key(row, pos, d, r2, p2, d2), c)
+        digits[(row, pos)] = d
+
+    # ------------------------------------------------------------------
+    # Occurrence search
+    # ------------------------------------------------------------------
+    def _find_occurrences(self, key: tuple) -> dict[int, list[int]]:
+        """Disjoint occurrences per column: base positions p such that the
+        digit pair ((i, p), (j, p+s)) matches the pattern."""
+        i, j, s, sign = key
+        out: dict[int, list[int]] = {}
+        for c in list(self.pattern_cols.get(key, {})):
+            digits = self.cols[c]
+            if i != j:
+                ps = [
+                    p
+                    for (r, p), d in digits.items()
+                    if r == i and (j, p + s) in digits and d * digits[(j, p + s)] == sign
+                ]
+            else:
+                # chains like p, p+s, p+2s share digits: greedy disjoint match
+                own = sorted(p for (r, p) in digits if r == i)
+                used: set[int] = set()
+                ps = []
+                for p in own:
+                    if p in used or (p + s) in used:
+                        continue
+                    if (i, p + s) in digits and digits[(i, p)] * digits[(i, p + s)] == sign:
+                        ps.append(p)
+                        used.add(p)
+                        used.add(p + s)
+            if ps:
+                out[c] = sorted(ps)
+        return out
+
+    # ------------------------------------------------------------------
+    # Main loop
+    # ------------------------------------------------------------------
+    def run(self) -> list[Optional[Term]]:
+        while self.heap:
+            neg_pri, _, key = heapq.heappop(self.heap)
+            cnt = self.counts.get(key, 0)
+            if cnt < 2:
+                continue
+            cur_pri = cnt * self._weight(key)
+            if -neg_pri > cur_pri + 1e-9:
+                self._push(key, cnt)  # stale (count dropped): re-sort
+                continue
+            if -neg_pri < cur_pri - 1e-9:
+                continue  # a fresher (higher-priority) entry is in the heap
+            self._implement(key)
+        return self._assemble()
+
+    def _implement(self, key: tuple) -> None:
+        i, j, s, sign = key
+        occs = self._find_occurrences(key)
+        u_depth = max(self.prog.rows[i].depth, self.prog.rows[j].depth) + 1
+        # Delay-constraint filter, per column, occurrence by occurrence.
+        accepted: dict[int, list[int]] = {}
+        total = 0
+        for c, ps in occs.items():
+            budget = self.budgets[c]
+            if budget is None:
+                accepted[c] = ps
+                total += len(ps)
+                continue
+            kept: list[int] = []
+            pending: list[tuple[int, int]] = []
+            for p in ps:
+                trial = pending + [(p, p + s)]
+                # exact per-column simulation with row identity
+                rm = {(i, pi) for pi, _ in trial} | {(j, pj) for _, pj in trial}
+                depths = [
+                    self.prog.rows[r].depth
+                    for (r, pp) in self.cols[c]
+                    if (r, pp) not in rm
+                ]
+                d = min_tree_depth(depths + [u_depth] * len(trial))
+                if d <= budget:
+                    kept.append(p)
+                    pending = trial
+                else:
+                    self.stats.n_rejected_by_depth += 1
+            if kept:
+                accepted[c] = kept
+                total += len(kept)
+        if total < 2:
+            return  # dormant until counts change again
+        u = self._impl_cache.get(key)
+        if u is None:
+            u = self.prog.add_op(i, j, max(0, -s), max(0, s), sign)
+            self._impl_cache[key] = u
+        self.stats.n_patterns_implemented += 1
+        for c, ps in accepted.items():
+            for p in ps:
+                d_i = self.cols[c][(i, p)]
+                self._remove_digit(c, i, p)
+                self._remove_digit(c, j, p + s)
+                self._add_digit(c, u, p + min(0, s), d_i)
+                self.stats.n_occurrences_replaced += 1
+
+    # ------------------------------------------------------------------
+    # Final adder-tree assembly per column
+    # ------------------------------------------------------------------
+    def _combine(self, t1: Term, t2: Term) -> Term:
+        if self.assembly_dedup:
+            ck = (t1, t2) if (t1.row, t1.shift, t1.sign) <= (t2.row, t2.shift, t2.sign) else (t2, t1)
+            hit = self._combine_cache.get(ck)
+            if hit is not None:
+                return hit
+        if t1.sign == t2.sign:
+            m = min(t1.shift, t2.shift)
+            u = self.prog.add_op(t1.row, t2.row, t1.shift - m, t2.shift - m, +1)
+            res = Term(t1.sign, u, m)
+        else:
+            pos, neg = (t1, t2) if t1.sign > 0 else (t2, t1)
+            m = min(pos.shift, neg.shift)
+            u = self.prog.add_op(pos.row, neg.row, pos.shift - m, neg.shift - m, -1)
+            res = Term(1, u, m)
+        self.stats.n_assembly_adders += 1
+        if self.assembly_dedup:
+            self._combine_cache[ck] = res
+        return res
+
+    def _assemble(self) -> list[Optional[Term]]:
+        outputs: list[Optional[Term]] = []
+        for c, digits in enumerate(self.cols):
+            if not digits:
+                outputs.append(None)
+                continue
+            # merge two shallowest first: optimal max-depth (min-max Huffman)
+            h: list[tuple[int, int, int, Term]] = []
+            seq = 0
+            for (row, pos), d in sorted(digits.items()):
+                t = Term(d, row, pos)
+                h.append((self.prog.rows[row].depth, self.prog.rows[row].qint.width, seq, t))
+                seq += 1
+            heapq.heapify(h)
+            while len(h) > 1:
+                _, _, _, t1 = heapq.heappop(h)
+                _, _, _, t2 = heapq.heappop(h)
+                t = self._combine(t1, t2)
+                heapq.heappush(h, (self.prog.rows[t.row].depth, self.prog.rows[t.row].qint.width, seq, t))
+                seq += 1
+            outputs.append(h[0][3])
+        return outputs

@@ -1,0 +1,218 @@
+"""DAIS — Distributed Arithmetic Instruction Set (paper §5.2).
+
+A DAIS program is a static-single-assignment list of shift-add operations
+that directly describes a combinational circuit.  Every value is a row in
+the program; every non-input row is one two-operand adder/subtractor of
+the canonical form
+
+    u = (a << sh_a)  +/-  (b << sh_b)          (sh_a, sh_b >= 0, min == 0)
+
+plus a rare unary negation ``u = -a`` (realised in hardware as ``0 - a``
+and therefore costed as an adder).  Outputs are *terms*: a row reference
+with a free power-of-two scale and a sign, ``y = sign * (row << shift)``
+(shift may be negative for fractional fixed point).
+
+The program carries exact quantized intervals (:class:`QInterval`) and
+adder depths per row, which drive the paper's cost model (Eq. 1) and the
+delay-constraint machinery.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from .fixed_point import QInterval, qint_add_shifted
+from .cost import adder_cost
+
+KIND_INPUT = 0
+KIND_ADD = 1  # u = (a << sh_a) + sign * (b << sh_b)
+KIND_NEG = 2  # u = -a
+
+
+@dataclass
+class Row:
+    kind: int
+    a: int = -1
+    b: int = -1
+    sh_a: int = 0
+    sh_b: int = 0
+    sign: int = 1  # sign applied to operand b
+    qint: QInterval = QInterval(0, 0, 0)
+    depth: int = 0
+    cost: int = 0  # full/half adder bits (Eq. 1)
+
+
+@dataclass(frozen=True)
+class Term:
+    """A value reference: ``sign * (row << shift)``."""
+
+    sign: int
+    row: int
+    shift: int
+
+
+@dataclass
+class DAISProgram:
+    """SSA shift-add program with per-row interval/depth metadata."""
+
+    rows: list[Row] = field(default_factory=list)
+    n_inputs: int = 0
+    # One entry per output; None encodes the constant 0 output.
+    outputs: list[Optional[Term]] = field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+    def add_input(self, qint: QInterval, depth: int = 0) -> int:
+        if any(r.kind != KIND_INPUT for r in self.rows):
+            raise ValueError("inputs must be added before ops")
+        self.rows.append(Row(KIND_INPUT, qint=qint, depth=depth))
+        self.n_inputs += 1
+        return len(self.rows) - 1
+
+    def add_op(self, a: int, b: int, sh_a: int, sh_b: int, sign: int) -> int:
+        """Append ``u = (a << sh_a) + sign * (b << sh_b)``; returns row idx."""
+        if min(sh_a, sh_b) != 0:
+            # normalise: factor out the common power of two (free shift)
+            m = min(sh_a, sh_b)
+            sh_a, sh_b = sh_a - m, sh_b - m
+        ra, rb = self.rows[a], self.rows[b]
+        qa, qb = ra.qint.shift(sh_a), rb.qint.shift(sh_b)
+        qint = qint_add_shifted(qa, qb, 0, sign)
+        depth = max(ra.depth, rb.depth) + 1
+        cost = adder_cost(ra.qint, rb.qint, sh_a, sh_b, sign)
+        self.rows.append(Row(KIND_ADD, a, b, sh_a, sh_b, sign, qint, depth, cost))
+        return len(self.rows) - 1
+
+    def add_neg(self, a: int) -> int:
+        ra = self.rows[a]
+        self.rows.append(
+            Row(KIND_NEG, a, -1, 0, 0, -1, ra.qint.neg(), ra.depth + 1, ra.qint.width + 1)
+        )
+        return len(self.rows) - 1
+
+    # ------------------------------------------------------------------
+    # Stats
+    # ------------------------------------------------------------------
+    @property
+    def n_adders(self) -> int:
+        return sum(1 for r in self.rows if r.kind != KIND_INPUT)
+
+    @property
+    def depth(self) -> int:
+        """Longest adder path from any input to any output."""
+        d = 0
+        for t in self.outputs:
+            if t is not None:
+                d = max(d, self.rows[t.row].depth)
+        return d
+
+    @property
+    def cost_bits(self) -> int:
+        """Total full/half-adder bit cost (proxy for FPGA LUTs)."""
+        return sum(r.cost for r in self.rows if r.kind != KIND_INPUT)
+
+    def output_qints(self) -> list[QInterval]:
+        """Intervals of the *evaluated* outputs, on the evaluation grid.
+
+        ``evaluate`` (and the Pallas executor) returns integers with the
+        term shift already applied, i.e. on the term's row grid — so the
+        interval endpoints are shifted while ``exp`` stays the row's.
+        """
+        out = []
+        for t in self.outputs:
+            if t is None:
+                out.append(QInterval(0, 0, 0))
+            else:
+                q = self.rows[t.row].qint
+                if t.shift >= 0:
+                    q = QInterval(q.lo << t.shift, q.hi << t.shift, q.exp)
+                else:
+                    q = QInterval(q.lo >> (-t.shift), q.hi >> (-t.shift), q.exp)
+                out.append(q.neg() if t.sign < 0 else q)
+        return out
+
+    def output_depths(self) -> list[int]:
+        return [0 if t is None else self.rows[t.row].depth for t in self.outputs]
+
+    # ------------------------------------------------------------------
+    # Pruning
+    # ------------------------------------------------------------------
+    def prune(self) -> "DAISProgram":
+        """Drop rows not reachable from any output (keep all inputs)."""
+        live = [False] * len(self.rows)
+        stack = [t.row for t in self.outputs if t is not None]
+        while stack:
+            i = stack.pop()
+            if live[i]:
+                continue
+            live[i] = True
+            r = self.rows[i]
+            if r.kind != KIND_INPUT:
+                stack.append(r.a)
+                if r.kind == KIND_ADD:
+                    stack.append(r.b)
+        remap: dict[int, int] = {}
+        new = DAISProgram()
+        for i, r in enumerate(self.rows):
+            if r.kind == KIND_INPUT:
+                remap[i] = new.add_input(r.qint, r.depth)
+            elif live[i]:
+                if r.kind == KIND_ADD:
+                    remap[i] = new.add_op(remap[r.a], remap[r.b], r.sh_a, r.sh_b, r.sign)
+                else:
+                    remap[i] = new.add_neg(remap[r.a])
+        new.outputs = [
+            None if t is None else Term(t.sign, remap[t.row], t.shift) for t in self.outputs
+        ]
+        return new
+
+    # ------------------------------------------------------------------
+    # Evaluation (exact, integer)
+    # ------------------------------------------------------------------
+    def evaluate(self, x: np.ndarray) -> np.ndarray:
+        """Evaluate the program on integer inputs.
+
+        ``x``: int array [..., n_inputs] on the *integer grid* of each
+        input's qint (i.e. x_real = x * 2^exp).  Returns the outputs as
+        int64 on the grids given by :meth:`output_qints` — concretely,
+        output j equals ``sign * (value_row << shift)`` computed exactly,
+        with negative shifts handled by the caller via the qint exps.
+        Here all shifts produced by the solver on the integer grid are
+        non-negative, so plain int64 shifts are exact.
+        """
+        x = np.asarray(x)
+        if x.shape[-1] != self.n_inputs:
+            raise ValueError(f"expected {self.n_inputs} inputs, got {x.shape[-1]}")
+        vals: list[np.ndarray] = []
+        for i, r in enumerate(self.rows):
+            if r.kind == KIND_INPUT:
+                vals.append(x[..., i].astype(np.int64))
+            elif r.kind == KIND_ADD:
+                vals.append((vals[r.a] << r.sh_a) + r.sign * (vals[r.b] << r.sh_b))
+            else:
+                vals.append(-vals[r.a])
+        outs = []
+        zero = np.zeros(x.shape[:-1], dtype=np.int64)
+        for t in self.outputs:
+            if t is None:
+                outs.append(zero)
+            elif t.shift >= 0:
+                outs.append(t.sign * (vals[t.row] << t.shift))
+            else:
+                outs.append(t.sign * (vals[t.row] >> (-t.shift)))
+        return np.stack(outs, axis=-1)
+
+    # ------------------------------------------------------------------
+    # Levelisation (for the Pallas executor)
+    # ------------------------------------------------------------------
+    def levelize(self) -> list[list[int]]:
+        """Group op row indices by adder depth (ascending)."""
+        by_depth: dict[int, list[int]] = {}
+        for i, r in enumerate(self.rows):
+            if r.kind != KIND_INPUT:
+                by_depth.setdefault(r.depth, []).append(i)
+        return [by_depth[d] for d in sorted(by_depth)]

@@ -1,0 +1,242 @@
+"""da4ml CMVM solver: two-stage pipeline (paper §4).
+
+``solve_cmvm`` takes a constant matrix (integer, or fixed-point floats on
+a power-of-two grid) and emits a :class:`DAISProgram` computing
+``y = x @ M`` exactly as a shift-add adder graph:
+
+  stage 1  graph decomposition  M = M1 @ M2      (graph_decompose)
+  stage 2  cost-aware CSE on M1 and on M2        (cse)
+  final    per-output minimal-depth adder trees  (cse._assemble)
+
+The delay constraint ``dc`` is the number of extra adder-depth levels
+allowed beyond each output's minimal achievable depth (dc = -1: none).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .cost import ceil_log2, min_tree_depth
+from .csd import csd_nnz
+from .cse import CSE, CSEStats
+from .dais import DAISProgram, Term
+from .fixed_point import QInterval
+from .graph_decompose import decompose
+
+
+@dataclass
+class Solution:
+    program: DAISProgram
+    matrix: np.ndarray  # integer matrix on the input grid
+    out_scale_exp: int  # real M = matrix * 2^out_scale_exp
+    dc: int
+    solver_time_s: float
+    decomposed: bool
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def n_adders(self) -> int:
+        return self.program.n_adders
+
+    @property
+    def depth(self) -> int:
+        return self.program.depth
+
+    @property
+    def cost_bits(self) -> int:
+        return self.program.cost_bits
+
+    @property
+    def lut_estimate(self) -> int:
+        return self.program.cost_bits
+
+    def evaluate(self, x: np.ndarray) -> np.ndarray:
+        """Exact integer evaluation of y = x @ matrix (grid units)."""
+        return self.program.evaluate(x)
+
+    def verify(self, n: int = 64, seed: int = 0) -> bool:
+        rng = np.random.default_rng(seed)
+        lo = np.array([q.lo for q in self._in_qints()], dtype=np.int64)
+        hi = np.array([q.hi for q in self._in_qints()], dtype=np.int64)
+        x = rng.integers(lo, hi + 1, size=(n, len(lo)), dtype=np.int64)
+        want = x @ self.matrix
+        got = self.evaluate(x)
+        return bool(np.array_equal(want, got))
+
+    def _in_qints(self) -> list[QInterval]:
+        return [r.qint for r in self.program.rows[: self.program.n_inputs]]
+
+
+def _integerize(m: np.ndarray, max_frac_bits: int = 32) -> tuple[np.ndarray, int]:
+    """Scale a float matrix on a power-of-two grid to exact integers."""
+    m = np.asarray(m)
+    if np.issubdtype(m.dtype, np.integer):
+        return m.astype(np.int64), 0
+    for k in range(max_frac_bits + 1):
+        scaled = m * (1 << k)
+        if np.allclose(scaled, np.round(scaled), rtol=0, atol=0):
+            return np.round(scaled).astype(np.int64), -k
+    raise ValueError("matrix entries are not on a power-of-two grid")
+
+
+def _budgets(
+    m: np.ndarray, in_depths: Sequence[int], dc: int
+) -> tuple[list[Optional[int]], list[int]]:
+    """Per-output depth budgets: minimal achievable depth + dc."""
+    nnz = csd_nnz(m)  # [d_in, d_out]
+    mins: list[int] = []
+    for j in range(m.shape[1]):
+        leaf_depths: list[int] = []
+        for i in range(m.shape[0]):
+            leaf_depths.extend([in_depths[i]] * int(nnz[i, j]))
+        mins.append(min_tree_depth(leaf_depths) if leaf_depths else 0)
+    if dc < 0:
+        return [None] * m.shape[1], mins
+    return [mn + dc for mn in mins], mins
+
+
+def solve_cmvm(
+    m: np.ndarray,
+    qint_in: Optional[Sequence[QInterval]] = None,
+    depth_in: Optional[Sequence[int]] = None,
+    dc: int = -1,
+    decompose_stage: bool = True,
+    weighted: bool = True,
+    assembly_dedup: bool = True,
+    depth_weight: float = 0.0,
+    program: Optional[DAISProgram] = None,
+    input_rows: Optional[Sequence[int]] = None,
+) -> Solution:
+    """Optimize ``y = x @ m`` into an adder graph.
+
+    Parameters
+    ----------
+    m : [d_in, d_out] constant matrix (ints, or floats on a 2^-k grid).
+    qint_in : per-input quantized intervals (default: signed 8-bit ints).
+    depth_in : per-input adder depths (default 0; used when chaining
+        CMVMs, e.g. consecutive NN layers).
+    dc : delay constraint — extra adder depth beyond per-output minimum
+        (-1 = unconstrained, as in the paper's tables).
+    decompose_stage : enable stage 1 (disabled automatically for dc=0
+        where the decomposition is provably trivial).
+    program / input_rows : optionally extend an existing program whose
+        rows ``input_rows`` are this CMVM's inputs (NN layer chaining).
+    """
+    t0 = time.perf_counter()
+    m_int, scale_exp = _integerize(m)
+    d_in, d_out = m_int.shape
+
+    if program is None:
+        program = DAISProgram()
+        if qint_in is None:
+            qint_in = [QInterval.from_fixed(True, 8, 8)] * d_in
+        if depth_in is None:
+            depth_in = [0] * d_in
+        input_rows = [program.add_input(q, d) for q, d in zip(qint_in, depth_in)]
+    else:
+        if input_rows is None:
+            raise ValueError("input_rows required when extending a program")
+        input_rows = list(input_rows)
+    in_depths = [program.rows[r].depth for r in input_rows]
+
+    budgets, _ = _budgets(m_int, in_depths, dc)
+
+    use_decomp = decompose_stage and dc != 0 and d_out > 1
+    stats: dict = {}
+    if use_decomp:
+        dec = decompose(m_int, dc)
+        stats["decomposition_trivial"] = dec.is_trivial
+        stats["m1_cols"] = int(dec.m1.shape[1])
+        if dec.is_trivial:
+            use_decomp = False
+
+    if use_decomp:
+        # ---- stage 2a: CSE on M1 ----
+        # budget for M1 column e: tightest consumer budget minus the depth
+        # reserve needed to merge that consumer's path terms.
+        k = dec.m1.shape[1]
+        m1_budgets: list[Optional[int]] = [None] * k
+        if dc >= 0:
+            for e in range(k):
+                consumers = np.nonzero(dec.m2[e, :])[0]
+                b = None
+                for j in consumers:
+                    bj = budgets[j]
+                    if bj is None:
+                        continue
+                    cand = bj - ceil_log2(int(dec.path_len[j]))
+                    b = cand if b is None else min(b, cand)
+                m1_budgets[e] = None if b is None else max(b, 0)
+        cols1 = [
+            {input_rows[i]: int(dec.m1[i, e]) for i in range(d_in) if dec.m1[i, e] != 0}
+            for e in range(k)
+        ]
+        cse1 = CSE(program, cols1, m1_budgets, weighted, assembly_dedup, depth_weight)
+        z_terms = cse1.run()
+        stats["stage1_cse"] = cse1.stats
+
+        # ---- stage 2b: CSE on M2 (rows rebased onto z program rows) ----
+        cols2: list[dict[int, int]] = []
+        for j in range(d_out):
+            col: dict[int, int] = {}
+            for e in range(k):
+                c = int(dec.m2[e, j])
+                if c == 0 or z_terms[e] is None:
+                    continue
+                t = z_terms[e]
+                col[t.row] = col.get(t.row, 0) + c * t.sign * (1 << t.shift)
+            cols2.append(col)
+        cse2 = CSE(program, cols2, budgets, weighted, assembly_dedup, depth_weight)
+        outputs = cse2.run()
+        stats["stage2_cse"] = cse2.stats
+    else:
+        cols = [
+            {input_rows[i]: int(m_int[i, j]) for i in range(d_in) if m_int[i, j] != 0}
+            for j in range(d_out)
+        ]
+        cse = CSE(program, cols, budgets, weighted, assembly_dedup, depth_weight)
+        outputs = cse.run()
+        stats["stage2_cse"] = cse.stats
+
+    program.outputs = outputs
+    pruned = program.prune()
+    dt = time.perf_counter() - t0
+    return Solution(pruned, m_int, scale_exp, dc, dt, use_decomp, stats)
+
+
+def naive_adder_tree(
+    m: np.ndarray,
+    qint_in: Optional[Sequence[QInterval]] = None,
+    depth_in: Optional[Sequence[int]] = None,
+) -> Solution:
+    """Baseline: per-output CSD adder tree without any sharing.
+
+    This models the resource behaviour of the fully-unrolled hls4ml
+    'latency' strategy (each output is an independent MAC tree), expressed
+    in the same adder/cost units so comparisons are apples-to-apples.
+    """
+    t0 = time.perf_counter()
+    m_int, scale_exp = _integerize(m)
+    d_in, d_out = m_int.shape
+    program = DAISProgram()
+    if qint_in is None:
+        qint_in = [QInterval.from_fixed(True, 8, 8)] * d_in
+    if depth_in is None:
+        depth_in = [0] * d_in
+    input_rows = [program.add_input(q, d) for q, d in zip(qint_in, depth_in)]
+    cols = [
+        {input_rows[i]: int(m_int[i, j]) for i in range(d_in) if m_int[i, j] != 0}
+        for j in range(d_out)
+    ]
+    cse = CSE(program, cols, [None] * d_out, weighted=False, assembly_dedup=False)
+    # skip the CSE loop entirely: assembly only
+    cse.heap = []
+    outputs = cse.run()
+    program.outputs = outputs
+    dt = time.perf_counter() - t0
+    sol = Solution(program.prune(), m_int, scale_exp, -1, dt, False, {"baseline": True})
+    return sol

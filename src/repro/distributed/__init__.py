@@ -1,0 +1,3 @@
+from .sharding import MeshRules, current_rules, constrain, use_rules
+
+__all__ = ["MeshRules", "constrain", "current_rules", "use_rules"]

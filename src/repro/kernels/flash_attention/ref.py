@@ -1,0 +1,93 @@
+"""Pure-jnp oracle for GQA flash attention (causal or full).
+
+Two paths, numerically identical:
+
+  * dense — materialises the [B,H,Sq,Sk] logits; used for short
+    sequences and as the oracle in kernel tests;
+  * chunked — static Python loop over query chunks, each attending only
+    to its causal K prefix (exact flops, no S x S buffer).  This is the
+    long-context path the dry-run lowers: peak attention memory is
+    O(Sq_chunk x Sk_chunk_limit) per chip instead of O(S^2).
+
+GQA is computed with a grouped einsum (no K/V repeat materialisation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_DENSE_MAX_ELEMS = 1 << 24  # logits entries per (b,h) slice before chunking
+_CHUNK = 1024
+
+
+def _attend(q, k, v, scale, causal, q_start, sk_valid=None):
+    """Grouped attention for one q chunk vs k[:, :, :Sk'].
+
+    q: [B, Hq, Cq, D]; k/v: [B, Hkv, Sk', D].  q_start: absolute position
+    of q[0] (int or traced scalar).  Masks ki > q_start + i.
+    """
+    b, hq, cq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    # bf16 operands with f32 accumulation (preferred_element_type): the
+    # MXU does bf16xbf16->f32 natively, and this avoids materialising f32
+    # copies of K/V (2x the cache traffic at decode time).
+    q5 = q.reshape(b, hkv, g, cq, d)
+    logits = (
+        jnp.einsum("bhgqd,bhkd->bhgqk", q5, k, preferred_element_type=jnp.float32)
+        * scale
+    )
+    sk = k.shape[2]
+    if causal:
+        qi = jnp.arange(cq)[:, None] + q_start
+        ki = jnp.arange(sk)[None, :]
+        mask = ki <= qi
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    m = logits.max(axis=-1, keepdims=True)
+    # fully-masked rows (can't happen for causal with q_start>=0) guard:
+    m = jnp.maximum(m, -1e30)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    out = out / p.sum(axis=-1, keepdims=True)
+    return out.reshape(b, hq, cq, d)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,  # [B, Hkv, Sk, D]
+    causal: bool = True,
+    scale: float | None = None,
+    offset=None,  # absolute position of q[0]; default end-aligned (Sk - Sq)
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    scale = d**-0.5 if scale is None else scale
+    static_offset = (sk - sq) if offset is None else offset
+
+    if sq * sk <= _DENSE_MAX_ELEMS or sq == 1:
+        out = _attend(q, k, v, scale, causal, static_offset)
+        return out.astype(q.dtype)
+
+    # chunked: static loop over q chunks; causal chunks slice K to the
+    # live prefix (exact flops; requires a static offset)
+    assert not hasattr(static_offset, "dtype") or not causal, (
+        "chunked causal attention needs a static offset"
+    )
+    outs = []
+    for i0 in range(0, sq, _CHUNK):
+        cq = min(_CHUNK, sq - i0)
+        qi = q[:, :, i0 : i0 + cq]
+        if causal:
+            hi = min(int(static_offset) + i0 + cq, sk)
+            hi = -(-hi // 128) * 128  # keep lane-aligned slices
+            hi = min(hi, sk)
+        else:
+            hi = sk
+        outs.append(
+            _attend(qi, k[:, :, :hi], v[:, :, :hi], scale, causal, static_offset + i0)
+        )
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import quant_matmul
+
+__all__ = ["quant_matmul"]

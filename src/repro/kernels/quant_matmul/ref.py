@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the int8 quantized matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(
+    x: jnp.ndarray,  # int8 [M, K]
+    w: jnp.ndarray,  # int8 [K, N]
+    x_scale: jnp.ndarray,  # f32 [M] per-row scales
+    w_scale: jnp.ndarray,  # f32 [N] per-channel scales
+) -> jnp.ndarray:
+    acc = jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]

@@ -1,0 +1,3 @@
+from .ops import selective_scan
+
+__all__ = ["selective_scan"]

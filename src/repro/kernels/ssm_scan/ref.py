@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    dt: jnp.ndarray,  # f32 [B, S, D]   (post-softplus)
+    bmat: jnp.ndarray,  # f32 [B, S, N]
+    cmat: jnp.ndarray,  # f32 [B, S, N]
+    x: jnp.ndarray,  # f32 [B, S, D]
+    a: jnp.ndarray,  # f32 [D, N]      (negative)
+    h0: jnp.ndarray,  # f32 [B, D, N]
+):
+    """h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t.
+
+    Returns (y [B, S, D], h_final [B, D, N])."""
+
+    def step(h, inp):
+        dt_t, b_t, x_t, c_t = inp
+        decay = jnp.exp(dt_t[:, :, None] * a)
+        h = decay * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    tm = lambda u: u.swapaxes(0, 1)
+    h, ys = jax.lax.scan(step, h0, (tm(dt), tm(bmat), tm(x), tm(cmat)))
+    return ys.swapaxes(0, 1), h

@@ -1,0 +1,299 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod /
+2x16x16 multi-pod placeholder devices), abstract params / optimizer state
+/ batches / caches (ShapeDtypeStruct — zero allocation), jits the real
+train_step / prefill / serve_step with explicit in/out shardings,
+``.lower().compile()``s it, and records:
+
+  * memory_analysis()  — per-chip HBM footprint (proves it fits),
+  * cost_analysis()    — per-chip FLOPs / bytes for §Roofline,
+  * collective wire bytes parsed from the optimized HLO,
+  * the three roofline terms + bottleneck + MFU bound.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system, not in the harness.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out experiments/dryrun.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from .. import configs  # noqa: E402
+from ..configs.base import SHAPES, RunConfig  # noqa: E402
+from ..distributed import MeshRules, use_rules  # noqa: E402
+from ..models import (  # noqa: E402
+    abstract_params,
+    decode_step,
+    param_shardings,
+)
+from ..models.transformer import cache_shardings, init_cache, prefill  # noqa: E402
+from ..optim import make_optimizer  # noqa: E402
+from ..optim.quantized_state import Quantized  # noqa: E402
+from ..train.train_lib import make_train_step  # noqa: E402
+from .hlo_analysis import analyze  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .roofline import Roofline, model_flops  # noqa: E402
+from .specs import batch_shardings, input_specs  # noqa: E402
+
+
+def _microbatch_for(cfg, shape, n_data: int) -> int:
+    """Grad-accumulation factor bounding the per-chip per-microbatch
+    activation memory — the scan carries saved for backward plus the f32
+    logits/one-hot of the loss — to ~4 GiB."""
+    per_chip_batch = max(shape.global_batch // n_data, 1)
+    tokens_chip = per_chip_batch * shape.seq_len
+    carry = tokens_chip * cfg.d_model * 2 * cfg.n_layers  # bf16 per layer
+    logits = tokens_chip * (cfg.padded_vocab // 16) * 4 * 2  # f32, vocab/model
+    total = carry + logits
+    mb = 1
+    while total / mb > 4e9 and mb < per_chip_batch:
+        mb *= 2
+    return mb
+
+
+def _run_cfg_for(cfg, shape=None, n_data: int = 16) -> RunConfig:
+    """Memory-appropriate optimizer settings per architecture scale."""
+    mb = _microbatch_for(cfg, shape, n_data) if shape is not None else 1
+    if cfg.param_count() > 3e11:  # 1T-class: factored states, pod-fsdp
+        return RunConfig(
+            optimizer="adafactor", master_dtype=None, fsdp_over_pod=True,
+            microbatch=mb,
+        )
+    if cfg.param_count() > 1.5e10:  # 20B+: bf16 params are the master;
+        # f32 moments sharded like params are ~1 GiB/chip at this scale
+        return RunConfig(master_dtype=None, microbatch=mb)
+    return RunConfig(microbatch=mb)
+
+
+def _shard_state_like(abs_state, abs_params, p_shardings, rules: MeshRules):
+    """Tree of shardings for an (abstract) optimizer state."""
+    replicated = jax.sharding.NamedSharding(rules.mesh, jax.sharding.PartitionSpec())
+    p_leaves, p_def = jax.tree.flatten(abs_params)
+    s_leaves = jax.tree.leaves(p_shardings)
+    by_shape = {}
+    for pl, sl in zip(p_leaves, s_leaves):
+        by_shape.setdefault(pl.shape, sl)
+
+    def pick(leaf):
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return replicated
+        hit = by_shape.get(leaf.shape)
+        if hit is not None:
+            return hit
+        # factored / quantized states: shard dim0 over fsdp if divisible
+        spec = rules.spec(("fsdp",) + (None,) * (leaf.ndim - 1), leaf.shape)
+        return jax.sharding.NamedSharding(rules.mesh, spec)
+
+    return jax.tree.map(pick, abs_state)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_data = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    run_cfg = _run_cfg_for(cfg, shape if shape.kind == "train" else None, n_data)
+    # inference: replicate params over data unless they don't fit per chip
+    serve_fsdp = cfg.param_count() * 2 / mesh.shape["model"] > 8e9
+    fsdp = True if shape.kind == "train" else serve_fsdp
+    rules = MeshRules(mesh, fsdp_over_pod=run_cfg.fsdp_over_pod, fsdp=fsdp)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    n_dev = mesh.devices.size
+
+    t0 = time.perf_counter()
+    with use_rules(rules):
+        abs_params = abstract_params(cfg)
+        p_sh = param_shardings(cfg, rules)
+        b_specs = input_specs(cfg, shape)
+        b_sh = batch_shardings(cfg, shape, rules)
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+        if shape.kind == "train":
+            train_step, opt_init = make_train_step(cfg, run_cfg)
+            abs_opt = jax.eval_shape(opt_init, abs_params)
+            o_sh = _shard_state_like(abs_opt, abs_params, p_sh, rules)
+            step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh, repl),
+                out_shardings=(p_sh, o_sh, repl),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(abs_params, abs_opt, b_specs, step_spec)
+        elif shape.kind == "prefill":
+            fn = lambda p, b: prefill(cfg, p, b, shape.seq_len)
+            abs_cache = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = cache_shardings(cfg, rules, shape.global_batch, shape.seq_len)
+            logits_sh = rules.sharding(
+                ("batch", "model"), (shape.global_batch, cfg.padded_vocab)
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(logits_sh, c_sh),
+            )
+            lowered = jitted.lower(abs_params, b_specs)
+        else:  # decode
+            abs_cache = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = cache_shardings(cfg, rules, shape.global_batch, shape.seq_len)
+            if cfg.family == "encdec":
+                cross_sh = jax.tree.map(
+                    lambda l: rules.sharding(
+                        (None, "batch", "model", None, None), l.shape
+                    ),
+                    abs_cache["cross"],
+                )
+                c_sh["cross"] = cross_sh
+            logits_sh = rules.sharding(
+                ("batch", "model"), (shape.global_batch, cfg.padded_vocab)
+            )
+            serve_step = lambda p, t, c: decode_step(cfg, p, t, c)
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, b_sh["tokens"], c_sh),
+                out_shardings=(logits_sh, c_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(abs_params, b_specs["tokens"], abs_cache)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-weighted analysis (XLA's cost_analysis counts while
+    # bodies once; see hlo_analysis.py)
+    wc = analyze(hlo, n_dev)
+
+    flops_chip = wc.flops
+    bytes_chip = wc.hbm_bytes
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    alias = getattr(mem, "alias_size_in_bytes", 0)
+    donated = shape.kind in ("train", "decode")
+    # CPU memory_analysis does not account donation: on TPU the donated
+    # inputs (params+opt / cache) alias the outputs, so peak ~ args+temps.
+    mem_bytes = arg_b + tmp_b + (0 if donated else out_b) - alias
+
+    rl = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        n_devices=n_dev,
+        flops_per_chip=flops_chip,
+        bytes_per_chip=bytes_chip,
+        coll_bytes_per_chip=wc.coll_wire_bytes,
+        coll_by_kind=wc.coll_by_kind,
+        model_flops_total=model_flops(cfg, shape),
+        memory_per_chip_bytes=mem_bytes,
+    )
+    row = rl.row()
+    row.update(
+        {
+            "status": "ok",
+            "args_gb": round(arg_b / 2**30, 2),
+            "out_gb": round(out_b / 2**30, 2),
+            "temp_gb": round(tmp_b / 2**30, 2),
+            "microbatch": run_cfg.microbatch,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "n_collectives": wc.n_collectives,
+            "xla_flops_unweighted": float(cost.get("flops", 0.0)),
+            "sharding_fallbacks": [str(f) for f in rules.fallbacks],
+            "optimizer": run_cfg.optimizer
+            + ("/int8" if run_cfg.state_dtype == "int8" else "")
+            + ("/f32master" if run_cfg.master_dtype == "float32" else ""),
+        }
+    )
+    if verbose:
+        print(
+            f"[{arch} x {shape_name} x {mesh_name}] OK  "
+            f"mem/chip={row['memory_per_chip_gb']:.2f}GiB  "
+            f"t_comp={rl.t_compute*1e3:.2f}ms t_mem={rl.t_memory*1e3:.2f}ms "
+            f"t_coll={rl.t_collective*1e3:.2f}ms -> {rl.bottleneck}  "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+            flush=True,
+        )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results if r.get("status") == "ok"}
+
+    for arch in archs:
+        cfg = configs.get(arch)
+        shapes = (
+            configs.applicable_shapes(cfg)
+            if args.shape == "all"
+            else args.shape.split(",")
+        )
+        for shape_name in shapes:
+            if shape_name not in configs.applicable_shapes(cfg):
+                print(f"[{arch} x {shape_name}] SKIPPED (inapplicable family)")
+                continue
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                if (arch, shape_name, mesh_name) in done:
+                    continue
+                try:
+                    row = dryrun_cell(arch, shape_name, multi)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    row = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mesh_name,
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                    }
+                results = [
+                    r
+                    for r in results
+                    if (r["arch"], r["shape"], r["mesh"]) != (arch, shape_name, mesh_name)
+                ] + [row]
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e targets):
+
+    compute    = FLOPs_per_chip   / 197e12   (bf16 MXU peak)
+    memory     = bytes_per_chip   / 819e9    (HBM bandwidth)
+    collective = coll_bytes_chip  / 50e9     (ICI, per-link)
+
+``compiled.cost_analysis()`` reports the post-SPMD per-partition module,
+i.e. per-chip FLOPs / bytes.  Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO text and sum wire traffic per collective op
+(result shapes are per-partition):
+
+    all-reduce         2 x size          (ring: reduce-scatter+all-gather)
+    all-gather         size x (G-1)/G    (result is the gathered buffer)
+    reduce-scatter     size x (G-1)      (input = G x result)
+    all-to-all         size x (G-1)/G
+    collective-permute size
+
+MODEL_FLOPS uses 6*N*D (train) or 2*N*D (inference) with N = active
+params, D = tokens; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat and
+redundant-compute overhead.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?:[a-z0-9_]+)\[[^\]]*\][^ ]*)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Total bytes of the instruction's result (left of the op name)."""
+    lhs = line.split("=", 1)[1]
+    # result shape(s) appear before the op name token
+    for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"):
+        idx = lhs.find(op)
+        if idx >= 0:
+            lhs = lhs[:idx]
+            break
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-chip wire bytes summed over every collective in the module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-start" in line and ("-done" in hlo_text):
+            pass  # async pairs: count the -start only (done carries no shape)
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done" in line.split("=")[0] if "=" in line else False:
+            continue
+        rb = _result_bytes(line)
+        if rb == 0:
+            continue
+        g = _group_size(line, n_devices)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            stats.add(kind, 2.0 * rb * frac)
+        elif kind == "all-gather":
+            stats.add(kind, rb * frac)
+        elif kind == "reduce-scatter":
+            stats.add(kind, rb * (g - 1))
+        elif kind == "all-to-all":
+            stats.add(kind, rb * frac)
+        else:  # collective-permute
+            stats.add(kind, float(rb))
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: dict
+    model_flops_total: float
+    memory_per_chip_bytes: float  # from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/redundancy waste)."""
+        total_hlo = self.flops_per_chip * self.n_devices
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the dominant roofline term."""
+        t = self.t_bound
+        if t == 0:
+            return 0.0
+        return self.model_flops_total / (self.n_devices * PEAK_FLOPS * t)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_total,
+            "hlo_flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_by_kind": self.coll_by_kind,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "memory_per_chip_gb": self.memory_per_chip_bytes / 2**30,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

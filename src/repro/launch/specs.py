@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Everything the dry-run lowers against — params, batches, caches — is
+abstract: weak-type-correct, shardable, zero device allocation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, applicable_shapes
+from ..configs.base import ArchConfig, ShapeConfig
+from ..distributed import MeshRules
+from ..models import init_cache
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for one cell (excluding params/cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(n):
+        return jax.ShapeDtypeStruct((b, n), i32)
+
+    if shape.kind == "train":
+        batch = {"tokens": tok(s), "labels": tok(s)}
+        if cfg.family == "vlm":
+            # image tokens replace a prefix of the sequence budget
+            batch = {
+                "tokens": tok(s - cfg.vision_tokens),
+                "labels": tok(s - cfg.vision_tokens),
+                "img_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+            }
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(s)}
+        if cfg.family == "vlm":
+            batch = {
+                "tokens": tok(s - cfg.vision_tokens),
+                "img_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+                ),
+            }
+        if cfg.family == "encdec":
+            batch["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": tok(1)}
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules) -> dict:
+    specs = input_specs(cfg, shape)
+
+    def shard(leaf):
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        return rules.sharding(axes, leaf.shape)
+
+    return jax.tree.map(shard, specs)
+
+
+def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
+    return init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+
+
+def cell_names(cfg: ArchConfig) -> list[str]:
+    return applicable_shapes(cfg)

@@ -1,0 +1,83 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --seq-len 128 --batch 8 [--smoke] [--mesh single|multi|none]
+
+On the CPU harness use --smoke (reduced config, no mesh).  On a real
+TPU fleet, drop --smoke: the launcher builds the production mesh, shards
+params/optimizer/batches per the rules, and runs the fault-tolerant
+Trainer (async checkpoints, crash recovery, deterministic data resume).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from .. import configs
+from ..configs.base import RunConfig
+from ..data.pipeline import DataConfig, Pipeline
+from ..distributed import MeshRules, use_rules
+from ..models import init_params, param_shardings
+from ..train.train_lib import Trainer, make_train_step
+from .mesh import make_production_mesh
+
+
+def main() -> None:
+    logging.basicConfig(level=logging.INFO)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    run_cfg = RunConfig(
+        learning_rate=args.lr,
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+        microbatch=args.microbatch,
+        master_dtype=None if cfg.param_count() > 1.5e10 else "float32",
+    )
+    pipe = Pipeline(
+        DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq_len, global_batch=args.batch
+        )
+    )
+    rules = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        rules = MeshRules(mesh)
+
+    with use_rules(rules):
+        step_fn, opt_init = make_train_step(cfg, run_cfg)
+        if rules is not None:
+            p_sh = param_shardings(cfg, rules)
+            jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            init_fn = lambda: jax.jit(
+                lambda k: init_params(cfg, k), out_shardings=p_sh
+            )(jax.random.PRNGKey(0))
+        else:
+            jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+
+        trainer = Trainer.resume_or_init(cfg, run_cfg, pipe, init_fn, jit_step, opt_init)
+        print(
+            f"training {cfg.name}: {cfg.param_count():,} params, "
+            f"resuming at step {trainer.step}"
+        )
+        metrics = trainer.run(args.steps)
+        print(f"done at step {trainer.step}: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from .transformer import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shardings,
+    param_specs,
+)
+
+__all__ = [
+    "abstract_params",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_shardings",
+    "param_specs",
+]

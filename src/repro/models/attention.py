@@ -1,0 +1,122 @@
+"""GQA attention with optional qk-norm, RoPE, KV cache, flash kernel path."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+from ..distributed.sharding import axis_size
+from ..kernels.flash_attention import flash_attention
+from .layers import rmsnorm, rope
+
+
+def attention_block(
+    cfg,
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,  # [B, S] or [S]
+    cache: Optional[dict] = None,  # {"k","v": [B, S_max, Hkv, hd], "pos": scalar}
+    causal: bool = True,
+    kv_source: Optional[jnp.ndarray] = None,  # cross-attention keys/values
+):
+    """Returns (out [B, S, D], new_cache)."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    from ..distributed.sharding import gathered
+
+    q = (x @ gathered(p["wq"], None, "model")).reshape(b, s, hq, hd)
+    src = x if kv_source is None else kv_source
+    k = (src @ gathered(p["wk"], None, "model")).reshape(b, src.shape[1], hkv, hd)
+    v = (src @ gathered(p["wv"], None, "model")).reshape(b, src.shape[1], hkv, hd)
+    q = constrain(q, "batch", "seq", "model", None)
+    k = constrain(k, "batch", "seq", "model", None)
+    v = constrain(v, "batch", "seq", "model", None)
+
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if kv_source is None:  # no RoPE on cross-attention
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    # Self-attention caches are head-major [B, Hkv, S, hd] (the layout
+    # attention consumes — a seq-major cache costs a full relayout of the
+    # stacked cache every decode step), sliced per layer by the scan.
+    new_cache = None
+    offset = None
+    kh = vh = None
+    if cache is not None:
+        if kv_source is None:
+            pos = cache["pos"]
+            # cache may hold KV heads replicated up to the TP degree (see
+            # transformer.kv_cache_heads); replicate the fresh K/V to match
+            h_eff = cache["k"].shape[1]
+            if h_eff != hkv:
+                r = h_eff // hkv
+                k = jnp.repeat(k, r, axis=2)
+                v = jnp.repeat(v, r, axis=2)
+            kc = _dus_seq(cache["k"], k.transpose(0, 2, 1, 3), pos)
+            vc = _dus_seq(cache["v"], v.transpose(0, 2, 1, 3), pos)
+            new_cache = {"k": kc, "v": vc, "pos": pos + s}
+            if s == 1:
+                # decode: attend over this layer's cache (its layout may
+                # shard the seq dim; softmax stats all-reduce under SPMD)
+                kh, vh = kc, vc
+                offset = pos  # mask unwritten slots beyond the frontier
+            # prefill (s > 1, pos == 0): attend over the fresh contiguous
+            # K/V — avoids resharding chunked slices of the cache layout
+        else:
+            # cross-attention cache: precomputed K/V over the encoder
+            # output, already sliced per period position (scan xs)
+            kh, vh = cache["k"], cache["v"]
+            new_cache = cache
+
+    if kh is None:
+        # GQA head-sharding repair: when q heads divide the model axis but
+        # kv heads do not, the grouped attention einsum cannot stay
+        # head-sharded (8x8 reshape of a 16-sharded 64-head axis
+        # replicates the logits).  Repeating K/V to full heads *under a
+        # sharding constraint* keeps attention 16-way head-parallel; the
+        # repeat is local per shard.  (Head count taken from the tensor:
+        # the cache path may already have replicated kv heads.)
+        ms = axis_size("model")
+        hkv_cur = k.shape[2]
+        if s > 1 and hq != hkv_cur and ms > 1 and hq % ms == 0 and hkv_cur % ms != 0:
+            g = hq // hkv_cur
+            k = constrain(jnp.repeat(k, g, axis=2), "batch", "seq", "model", None)
+            v = constrain(jnp.repeat(v, g, axis=2), "batch", "seq", "model", None)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+
+    qh = q.transpose(0, 2, 1, 3)  # [B, H, S, hd]
+    out = flash_attention(
+        qh, kh, vh,
+        causal=causal and kv_source is None,
+        offset=offset,
+        use_pallas=cfg.use_flash_kernel,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    out = constrain(out, "batch", "seq", "model")
+    y = out @ gathered(p["wo"], "model", None)
+    return constrain(y, "batch", "seq", None), new_cache
+
+
+def precompute_cross_cache(cfg, p: dict, enc_out: jnp.ndarray) -> dict:
+    """K/V over encoder output for decode-time cross attention
+    (head-major [B, Hkv, T, hd])."""
+    b, t, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(b, t, hkv, hd).transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}
+
+
+def _dus_seq(buf: jnp.ndarray, update: jnp.ndarray, pos) -> jnp.ndarray:
+    """dynamic_update_slice along the sequence axis of a head-major
+    [B, H, S, hd] cache slice (axis 2)."""
+    idx = (jnp.int32(0), jnp.int32(0), jnp.asarray(pos, jnp.int32), jnp.int32(0))
+    return jax.lax.dynamic_update_slice(buf, update.astype(buf.dtype), idx)

@@ -1,0 +1,52 @@
+"""Shared LM building blocks: RMSNorm, RoPE, SwiGLU, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, S, H, D]; positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    from ..distributed.sharding import gathered
+
+    g = constrain(x @ gathered(w_gate, None, "model"), "batch", "seq", "model")
+    u = constrain(x @ gathered(w_up, None, "model"), "batch", "seq", "model")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return constrain(h @ gathered(w_down, "model", None), "batch", "seq", None)
+
+
+def embed_tokens(embedding: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(embedding, tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def unembed(x: jnp.ndarray, head: jnp.ndarray) -> jnp.ndarray:
+    logits = x @ head
+    return constrain(logits, "batch", "seq", "model")

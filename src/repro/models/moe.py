@@ -1,0 +1,110 @@
+"""Top-k token-choice MoE with shard-local capacity dispatch.
+
+Dispatch is expressed with an explicit leading shard dimension: tokens
+[T, D] are viewed as [n_shards, T_local, D] (dim 0 laid out on the data
+axes), every shard routes its own tokens with a *local* capacity
+C = cf * T_local * k / E, and expert buffers are [n, E, C, D] sharded
+(data, model, -, -).  Under SPMD this lowers to the canonical
+all-to-all on the model axis, and — critically — no global-capacity
+buffer ever exists: per-chip dispatch memory is C_local * E/model * D.
+Rank computation is a per-shard stable sort (no [T, E] one-hot matrix).
+
+Over-capacity tokens are dropped (Switch/GShard semantics); the Switch
+load-balance auxiliary loss is returned for training.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+from ..distributed.sharding import axis_size
+
+
+def moe_block(cfg, p: dict, x: jnp.ndarray):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    n = axis_size("batch")
+    if t % n or n < 1:
+        n = 1
+    tl = t // n
+    xt = constrain(x.reshape(n, tl, d), "batch", None, None)
+
+    logits = (
+        jnp.einsum("ntd,de->nte", xt, p["router"].astype(xt.dtype))
+    ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [n, tl, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss: E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))
+    oh = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # [n, tl, k, E]
+    ce = oh.sum(axis=(0, 1, 2)) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = max(int(cfg.capacity_factor * tl * k / e), 1)
+    capacity = -(-capacity // 8) * 8
+
+    # shard-local slot assignment via stable sort by expert id
+    flat_e = gate_idx.transpose(0, 2, 1).reshape(n, k * tl)  # slot-major
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    rows = jnp.arange(n)[:, None]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    ar = jnp.broadcast_to(jnp.arange(k * tl, dtype=jnp.int32), (n, k * tl))
+    seg_start = jnp.concatenate(
+        [jnp.ones((n, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1
+    )
+    seg_origin = jax.lax.cummax(jnp.where(seg_start, ar, 0), axis=1)
+    ranks_sorted = ar - seg_origin
+    ranks = jnp.zeros((n, k * tl), jnp.int32).at[rows, order].set(ranks_sorted)
+
+    keep = ranks < capacity
+    slot = jnp.where(keep, ranks, 0)
+    tok_idx = jnp.broadcast_to(
+        jnp.tile(jnp.arange(tl, dtype=jnp.int32), k), (n, k * tl)
+    )
+
+    # SPMD-friendly dispatch: every scatter/gather runs along ONE
+    # unsharded flat axis (E*C) with batch-sharded indices — the
+    # partitioner keeps them fully shard-local.  Cross-shard indexing
+    # (ye[rows, flat_e, slot] with a model-sharded expert axis) would
+    # make XLA replicate the operand over both axes and emit full-size
+    # all-reduces (measured: 48 TB/chip/step wire on qwen3-moe train).
+    dest = flat_e * capacity + slot  # [n, k*tl] in [0, E*C)
+    xg = jnp.take_along_axis(xt, tok_idx[..., None], axis=1)  # local gather
+    contrib = jnp.where(keep[..., None], xg, 0)
+    # vmap of a 1-D scatter lowers with operand_batching_dims, letting the
+    # partitioner keep the whole scatter (and its transpose in backward)
+    # parallel over the batch-sharded dim 0; `.at[rows, dest]` would not.
+    scatter1 = jax.vmap(lambda buf, i, u: buf.at[i].add(u))
+    xe_flat = scatter1(jnp.zeros((n, e * capacity, d), xt.dtype), dest, contrib)
+    # per data-shard the full [E, C, D] buffer exists; slicing E onto the
+    # model axis is communication-free (it was replicated across model)
+    xe = constrain(xe_flat.reshape(n, e, capacity, d), "batch", "model", None, None)
+
+    # expert MLPs (SwiGLU), batched over E; E stays model-sharded and the
+    # fsdp dim of the expert weights is gathered before use
+    from ..distributed.sharding import gathered
+
+    wg = gathered(p["w_gate"], "model", None, None)
+    wu = gathered(p["w_up"], "model", None, None)
+    wd = gathered(p["w_down"], "model", None, None)
+    g = constrain(jnp.einsum("necd,edf->necf", xe, wg), "batch", "model", None, None)
+    u = constrain(jnp.einsum("necd,edf->necf", xe, wu), "batch", "model", None, None)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = constrain(jnp.einsum("necf,efd->necd", h, wd), "batch", "model", None, None)
+
+    # combine: all-gather the expert outputs over the model axis (the one
+    # real collective of the block: E*C*D bf16 per data row), then gather
+    # and weight locally
+    ye_flat = constrain(ye.reshape(n, e * capacity, d), "batch", None, None)
+    out = jnp.take_along_axis(ye_flat, dest[..., None], axis=1)  # local
+    out = jnp.where(keep[..., None], out, 0)
+    w = gate_vals.transpose(0, 2, 1).reshape(n, k * tl)[..., None].astype(out.dtype)
+    yt = scatter1(jnp.zeros((n, tl, d), out.dtype), tok_idx, out * w)
+    y = yt.reshape(b, s, d)
+    return constrain(y, "batch", "seq", None), aux

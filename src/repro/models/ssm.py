@@ -1,0 +1,154 @@
+"""Mamba-1 selective-state-space block (falcon-mamba / Jamba mixer).
+
+Training path: chunked associative scan — the sequence is split into
+``cfg.ssm_chunk``-token chunks; within a chunk the recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+    y_t = C_t . h_t + D x_t
+
+is evaluated with ``jax.lax.associative_scan`` (work-efficient, depth
+log C), and chunks are chained with a carry scan.  The chunk body is
+rematerialised in the backward pass, so the [B, C, d_inner, state]
+intermediate never outlives a chunk — this is what makes 500k-token
+sequences trainable/servable (see DESIGN.md §Hardware adaptation).
+
+Decode path: single-step recurrence with (conv window, h) carried in the
+cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import constrain
+
+
+def _ssm_params(cfg, p):
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [d_inner, state]
+    d = p["d"].astype(jnp.float32)  # [d_inner]
+    return a, d
+
+
+def _dt_bx(cfg, p, x):
+    """Input-dependent dt, B, C. x: [B, L, d_inner] (f32)."""
+    proj = x @ p["x_proj"].astype(jnp.float32)  # [B, L, dt_rank + 2*state]
+    dtr, st = cfg.dt_rank, cfg.ssm_state
+    dt, bmat, cmat = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, bmat, cmat  # [B,L,d_inner], [B,L,state], [B,L,state]
+
+
+def _scan_chunk(a, dt, bx, h0):
+    """Associative scan of h_t = exp(dt_t a) h_{t-1} + bx_t within a chunk.
+
+    a: [d_inner, state]; dt: [B, C, d_inner]; bx: [B, C, d_inner, state];
+    h0: [B, d_inner, state].  Returns hs [B, C, d_inner, state].
+    """
+    decay = jnp.exp(dt[..., None] * a)  # [B, C, d, s]
+    # fold the incoming state into the first step
+    bx = bx.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (decay, bx), axis=1)
+    return hs
+
+
+def mamba_block(
+    cfg,
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D]
+    cache: Optional[dict] = None,
+    # cache: {"conv": [B, k-1, d_inner], "h": [B, d_inner, state]} —
+    # this layer's slice (scan xs); updates return via scan ys
+):
+    """Returns (y [B, S, D], new_cache)."""
+    b, s, _ = x.shape
+    di, st, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    xz = x @ p["in_proj"]  # [B, S, 2*d_inner]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq", "model")
+
+    # depthwise causal conv1d (kernel k), SiLU
+    if cache is not None:
+        conv_in = jnp.concatenate([cache["conv"].astype(xs.dtype), xs], axis=1)
+        new_conv = conv_in[:, -(k - 1):, :]
+    else:
+        conv_in = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(k - 1):, :]
+    w = p["conv"]  # [d_inner, k]
+    xc = sum(conv_in[:, i : i + s, :] * w[:, i] for i in range(k))
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+
+    a, d = _ssm_params(cfg, p)
+    dt, bmat, cmat = _dt_bx(cfg, p, xc)
+
+    h0 = (
+        cache["h"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((b, di, st), jnp.float32)
+    )
+
+    if s == 1:  # decode: single recurrence step
+        decay = jnp.exp(dt[:, 0, :, None] * a)
+        h = decay * h0 + dt[:, 0, :, None] * bmat[:, 0, None, :] * xc[:, 0, :, None]
+        y = jnp.einsum("bds,bs->bd", h, cmat[:, 0])[:, None, :]
+        new_h = h
+    elif cfg.ssm_mode == "seq":
+        # time-major sequential scan: only the [B, d_inner, state] carry
+        # and the per-step inputs/outputs touch HBM — the chunk-state
+        # tensor [B, C, d_inner, state] never materialises.
+        def step(h, inp):
+            dt_t, b_t, x_t, c_t = inp
+            decay = jnp.exp(dt_t[:, :, None] * a)
+            h = decay * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
+            y_t = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y_t
+
+        tm = lambda u: u.swapaxes(0, 1)  # [B,S,...] -> [S,B,...]
+        new_h, ys = jax.lax.scan(step, h0, (tm(dt), tm(bmat), tm(xc), tm(cmat)))
+        y = ys.swapaxes(0, 1)
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # identity-pad the recurrence: dt=0 -> decay=1, bx=0
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        sp = s + pad
+        n_chunks = sp // chunk
+
+        def body(h_carry, inp):
+            # bx materialises only at chunk granularity ([B,C,d,st]) and is
+            # rematerialised in backward: HBM traffic stays O(B*S*(d+st))
+            dt_c, b_c, x_c, c_c = inp
+            bx_c = dt_c[..., None] * b_c[:, :, None, :] * x_c[..., None]
+            hs = _scan_chunk(a, dt_c, bx_c, h_carry)
+            y_c = jnp.einsum("bcds,bcs->bcd", hs, c_c)
+            return hs[:, -1], y_c
+
+        body = jax.checkpoint(body)
+        dt_r = dt.reshape(b, n_chunks, chunk, di).swapaxes(0, 1)
+        b_r = bmat.reshape(b, n_chunks, chunk, st).swapaxes(0, 1)
+        x_r = xc.reshape(b, n_chunks, chunk, di).swapaxes(0, 1)
+        c_r = cmat.reshape(b, n_chunks, chunk, st).swapaxes(0, 1)
+        new_h, ys = jax.lax.scan(body, h0, (dt_r, b_r, x_r, c_r))
+        y = ys.swapaxes(0, 1).reshape(b, sp, di)[:, :s]
+        xc = xc[:, :s]  # drop the identity padding for the skip term
+
+    y = y + d * xc
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "model")
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": new_h.astype(cache["h"].dtype)}
+    return constrain(out, "batch", "seq", None), new_cache

@@ -1,0 +1,38 @@
+"""Quantized-NN substrate: HGQ-style QAT layers, the paper's benchmark
+networks, and the da4ml compile path (hls4ml-integration analogue)."""
+
+from .quant import QuantConfig, fake_quant
+from .layers import (
+    QDense,
+    QConv2D,
+    ReLU,
+    MaxPool2D,
+    AvgPool2D,
+    Flatten,
+    Residual,
+    QDenseOnAxis,
+    Sequential,
+    init_params,
+    apply_model,
+)
+from .compiler import compile_model, CompiledDesign
+from . import models
+
+__all__ = [
+    "AvgPool2D",
+    "CompiledDesign",
+    "Flatten",
+    "MaxPool2D",
+    "QConv2D",
+    "QDense",
+    "QDenseOnAxis",
+    "QuantConfig",
+    "ReLU",
+    "Residual",
+    "Sequential",
+    "apply_model",
+    "compile_model",
+    "fake_quant",
+    "init_params",
+    "models",
+]

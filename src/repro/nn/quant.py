@@ -1,0 +1,80 @@
+"""Fixed-point quantization-aware training utilities (HGQ-lite).
+
+The paper's networks are trained with HGQ [16]: per-weight bitwidths with
+differentiable quantization, yielding bit-level sparsity that da4ml then
+exploits.  We reproduce the deployment-relevant contract:
+
+  * every tensor lives on a power-of-two grid fixed<S, W, I>
+    (step 2^(I-W), range [-2^(I-1), 2^(I-1) - step] when signed);
+  * the forward pass is *bit-exact* with the integer hardware semantics:
+    floor rounding, saturation clipping — so a compiled adder graph
+    reproduces the trained float forward exactly (tests enforce this);
+  * straight-through estimators pass gradients through round/clip;
+  * an optional bit-count regulariser (mean |w|/step surrogate) drives
+    weights toward few CSD digits, mimicking HGQ's resource loss.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.fixed_point import QInterval
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """fixed<signed, bits, int_bits> (int_bits includes the sign bit)."""
+
+    bits: int
+    int_bits: int
+    signed: bool = True
+
+    @property
+    def step(self) -> float:
+        return 2.0 ** (self.int_bits - self.bits)
+
+    @property
+    def qint(self) -> QInterval:
+        return QInterval.from_fixed(self.signed, self.bits, self.int_bits)
+
+    @property
+    def lo(self) -> float:
+        return self.qint.lo * self.step
+
+    @property
+    def hi(self) -> float:
+        return self.qint.hi * self.step
+
+    def scale_exp(self) -> int:
+        return self.int_bits - self.bits
+
+
+def fake_quant(x: jnp.ndarray, cfg: QuantConfig, rounding: str = "floor") -> jnp.ndarray:
+    """Quantize to the fixed-point grid with a straight-through gradient."""
+    s = cfg.step
+    if rounding == "floor":
+        q = jnp.floor(x / s)
+    else:
+        q = jnp.round(x / s)
+    q = jnp.clip(q, cfg.qint.lo, cfg.qint.hi) * s
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def to_grid_int(x: jnp.ndarray, cfg: QuantConfig, rounding: str = "floor") -> jnp.ndarray:
+    """Integer grid coordinates of x (exact deployment representation)."""
+    s = cfg.step
+    q = jnp.floor(x / s) if rounding == "floor" else jnp.round(x / s)
+    return jnp.clip(q, cfg.qint.lo, cfg.qint.hi).astype(jnp.int32)
+
+
+def bit_count_surrogate(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Differentiable proxy for the CSD digit count of quantized weights.
+
+    log2(1 + |w|/step) grows ~linearly in the bitwidth a weight needs;
+    minimising its sum drives bit-level sparsity like HGQ's resource
+    term.
+    """
+    return jnp.log2(1.0 + jnp.abs(w) / cfg.step).sum()

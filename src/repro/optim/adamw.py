@@ -1,0 +1,106 @@
+"""AdamW with mixed-precision master params and optional 8-bit moments.
+
+Functional API:
+    init(params)                      -> OptState
+    update(grads, state, params, lr)  -> (new_params, new_state)
+
+Memory modes (RunConfig):
+  master_dtype="float32"  classic mixed precision: f32 master copy,
+                          bf16 working params; moments in f32.
+  master_dtype=None       bf16 params are the master (no copy).
+  state_dtype="int8"      blockwise-quantized moments (8-bit Adam),
+                          ~8x less optimizer HBM than f32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantized_state import Quantized, dequantize, quantize
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any  # f32 master params, or None
+
+
+def _maybe_q(x, state_dtype, signed):
+    if state_dtype == "int8":
+        return quantize(x, signed)
+    return x
+
+
+def _maybe_dq(x):
+    return dequantize(x) if isinstance(x, Quantized) else x
+
+
+def make_adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    master_dtype: Optional[str] = "float32",
+    state_dtype: Optional[str] = None,
+):
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: _maybe_q(jnp.zeros(p.shape, jnp.float32), state_dtype, True),
+            params,
+        )
+        zeros_v = jax.tree.map(
+            lambda p: _maybe_q(jnp.zeros(p.shape, jnp.float32), state_dtype, False),
+            params,
+        )
+        master = (
+            # copy=True: with f32 params astype would alias the param
+            # buffer, breaking donation of (params, opt_state) pairs
+            jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+            if master_dtype == "float32"
+            else None
+        )
+        return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros_v, master)
+
+    def update(grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        masters = state.master if state.master is not None else params
+
+        def upd(g, m_q, v_q, p, master):
+            g = g.astype(jnp.float32)
+            m = b1 * _maybe_dq(m_q) + (1 - b1) * g
+            v = b2 * _maybe_dq(v_q) + (1 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            master_f = master.astype(jnp.float32)
+            new_master = master_f - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * master_f)
+            return (
+                new_master.astype(p.dtype),
+                _maybe_q(m, state_dtype, True),
+                _maybe_q(v, state_dtype, False),
+                new_master if master_dtype == "float32" else None,
+            )
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        m_leaves = treedef.flatten_up_to(state.m)
+        v_leaves = treedef.flatten_up_to(state.v)
+        p_leaves = treedef.flatten_up_to(params)
+        ma_leaves = treedef.flatten_up_to(masters)
+        out = [
+            upd(*args) for args in zip(g_leaves, m_leaves, v_leaves, p_leaves, ma_leaves)
+        ]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_master = (
+            treedef.unflatten([o[3] for o in out]) if master_dtype == "float32" else None
+        )
+        return new_params, AdamWState(step, new_m, new_v, new_master)
+
+    return init, update

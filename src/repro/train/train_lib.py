@@ -1,0 +1,205 @@
+"""Train-step factory: mixed precision, grad clipping, microbatch
+accumulation, sharded optimizer update — plus the fault-tolerant driver.
+
+``make_train_step(cfg, run_cfg)`` returns a pure function
+    train_step(params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jit with donated (params, opt_state).  Gradient accumulation
+runs as a lax.scan over microbatches with f32 accumulators, so the
+memory-optimal schedule (one microbatch live at a time) is what XLA sees.
+
+The ``Trainer`` driver adds the production concerns: checkpoint/restart
+(async, atomic), deterministic data resume (the step counter is the data
+cursor), crash recovery with bounded retries, and a straggler/heartbeat
+hook (on real fleets this is wired to the cluster health service; here it
+is a timing watchdog around the step future).
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, RunConfig
+from ..distributed import current_rules
+from ..models import loss_fn, param_specs
+from ..optim import lr_schedule, make_optimizer
+from . import checkpoint
+
+log = logging.getLogger("repro.train")
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def make_train_step(cfg: ArchConfig, run_cfg: RunConfig):
+    opt_init, opt_update = make_optimizer(run_cfg)
+
+    def constrain_like_params(tree):
+        """Pin a param-shaped tree (e.g. the f32 grad accumulator) to the
+        parameter sharding — left unconstrained XLA tends to shard it
+        only along one mesh axis, inflating temp memory 16x."""
+        rules = current_rules()
+        if rules is None:
+            return tree
+        specs = param_specs(cfg)
+        leaves, treedef = jax.tree.flatten(tree)
+        from ..models.transformer import PSpec
+
+        spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, PSpec))
+        out = [rules.constrain(x, *s.axes) for x, s in zip(leaves, spec_leaves)]
+        return treedef.unflatten(out)
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return loss, parts, grads
+
+    def train_step(params, opt_state, batch, step):
+        mb = run_cfg.microbatch
+        if mb > 1:
+            def body(carry, micro):
+                acc, loss_acc = carry
+                loss, _, grads = grads_of(params, micro)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / mb, acc, grads
+                )
+                return (constrain_like_params(acc), loss_acc + loss / mb), None
+
+            micro = jax.tree.map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch
+            )
+            zeros = constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (grads, loss), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        else:
+            loss, _, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, run_cfg.grad_clip)
+        lr = lr_schedule(run_cfg, step)
+        new_params, new_opt = opt_update(grads, opt_state, params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step, opt_init
+
+
+class Trainer:
+    """Fault-tolerant training driver (checkpoint/restart/elastic)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        run_cfg: RunConfig,
+        pipeline,
+        params,
+        jit_train_step,
+        opt_state,
+        step: int = 0,
+        straggler_warn_s: Optional[float] = None,
+    ):
+        self.cfg = cfg
+        self.run_cfg = run_cfg
+        self.pipeline = pipeline
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+        self.train_step = jit_train_step
+        self.straggler_warn_s = straggler_warn_s
+        self._save_thread = None
+        self._step_times: list[float] = []
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def resume_or_init(cls, cfg, run_cfg, pipeline, init_params_fn, jit_train_step, opt_init):
+        params = init_params_fn()
+        opt_state = opt_init(params)
+        step = 0
+        last = checkpoint.latest_step(run_cfg.checkpoint_dir)
+        if last is not None:
+            log.info("restoring checkpoint step %d", last)
+            state = checkpoint.restore(
+                run_cfg.checkpoint_dir, last, {"p": params, "o": opt_state}
+            )
+            params, opt_state, step = state["p"], state["o"], last
+        return cls(cfg, run_cfg, pipeline, params, jit_train_step, opt_state, step)
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, max_restarts: int = 3, fail_hook=None) -> dict:
+        """Run n_steps with crash recovery. ``fail_hook(step)`` may raise
+        to simulate node failure (tests use this)."""
+        target = self.step + n_steps
+        restarts = 0
+        metrics = {}
+        while self.step < target:
+            try:
+                if fail_hook is not None:
+                    fail_hook(self.step)
+                metrics = self._one_step()
+            except (RuntimeError, OSError) as e:  # node failure / preemption
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restoring last checkpoint", self.step, e)
+                self._restore_latest()
+        self._checkpoint(force=True)
+        if self._save_thread is not None:
+            self._save_thread.join()
+        return metrics
+
+    def _one_step(self) -> dict:
+        t0 = time.perf_counter()
+        batch = self.pipeline.batch_at(self.step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.params, self.opt_state, metrics = self.train_step(
+            self.params, self.opt_state, batch, self.step
+        )
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        self._step_times.append(dt)
+        if len(self._step_times) >= 8:
+            recent = self._step_times[-16:]
+            med = sorted(recent)[len(recent) // 2]
+            thresh = self.straggler_warn_s if self.straggler_warn_s else 3 * med
+            if dt > thresh:
+                log.warning(
+                    "straggler: step %d took %.2fs (median %.2fs) — on a real "
+                    "fleet this triggers hot-spare promotion", self.step, dt, med,
+                )
+        self.step += 1
+        if self.step % self.run_cfg.checkpoint_every == 0:
+            self._checkpoint()
+        return {k: float(v) for k, v in metrics.items()}
+
+    def _checkpoint(self, force: bool = False):
+        if self._save_thread is not None:
+            self._save_thread.join()
+        self._save_thread = checkpoint.save(
+            self.run_cfg.checkpoint_dir,
+            self.step,
+            {"p": self.params, "o": self.opt_state},
+            keep=self.run_cfg.keep_checkpoints,
+            async_=not force,
+        )
+
+    def _restore_latest(self):
+        last = checkpoint.latest_step(self.run_cfg.checkpoint_dir)
+        if last is None:
+            raise RuntimeError("no checkpoint to restore from")
+        state = checkpoint.restore(
+            self.run_cfg.checkpoint_dir, last, {"p": self.params, "o": self.opt_state}
+        )
+        self.params, self.opt_state, self.step = state["p"], state["o"], last

@@ -1,0 +1,64 @@
+"""CSD representation: round-trip, canonical form, digit-count minimality."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import csd_nnz, csd_span, from_csd, to_csd
+
+
+@given(st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_csd_roundtrip(values):
+    x = np.array(values, dtype=np.int64)
+    digits = to_csd(x)
+    assert np.array_equal(from_csd(digits), x)
+
+
+@given(st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_csd_no_adjacent_nonzero(values):
+    x = np.array(values, dtype=np.int64)
+    d = to_csd(x)
+    adjacent = (d[..., :-1] != 0) & (d[..., 1:] != 0)
+    assert not adjacent.any()
+
+
+@given(st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=64))
+@settings(max_examples=200, deadline=None)
+def test_csd_nnz_matches_encoding(values):
+    x = np.array(values, dtype=np.int64)
+    d = to_csd(x)
+    assert np.array_equal((d != 0).sum(axis=-1), csd_nnz(x))
+
+
+def test_csd_nnz_known_values():
+    # 1 -> [1]; 3 -> 4-1; 5 -> 4+1; 7 -> 8-1; 0 -> none; 255 -> 256-1
+    x = np.array([0, 1, 2, 3, 5, 7, -7, 255, 170])
+    want = np.array([0, 1, 1, 2, 2, 2, 2, 2, 4])
+    assert np.array_equal(csd_nnz(x), want)
+
+
+def test_csd_minimality_small_range():
+    """CSD is the minimum-weight signed-digit representation."""
+    for v in range(-512, 513):
+        nnz = int(csd_nnz(np.array([v]))[0])
+        # brute-force lower bound: any signed-binary repr of v needs at
+        # least ceil over greedy NAF; check nnz <= popcount(binary)
+        assert nnz <= bin(abs(v)).count("1")
+        if v != 0:
+            assert nnz >= 1
+
+
+def test_span_too_small_raises():
+    with pytest.raises(ValueError):
+        to_csd(np.array([1024]), span=5)
+
+
+def test_csd_average_density():
+    """~1/3 of digit positions non-zero on average (paper §4.2)."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(2**15, 2**16, size=4096)
+    density = csd_nnz(x).mean() / 16.0
+    assert 0.27 < density < 0.40

@@ -1,0 +1,70 @@
+"""Quantized-interval arithmetic: exactness of range propagation."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import QInterval
+from repro.core.fixed_point import qint_add_shifted
+
+qints = st.builds(
+    lambda lo, span, exp: QInterval(lo, lo + span, exp),
+    st.integers(-(2**20), 2**20),
+    st.integers(0, 2**20),
+    st.integers(-8, 8),
+)
+
+
+def test_from_fixed():
+    q = QInterval.from_fixed(True, 8, 8)  # signed 8-bit integer
+    assert (q.lo, q.hi, q.exp) == (-128, 127, 0)
+    assert q.width == 8 and q.signed
+    q = QInterval.from_fixed(False, 4, 2)  # ufixed<4,2>: step 1/4, max 3.75
+    assert (q.lo, q.hi, q.exp) == (0, 15, -2)
+    assert q.width == 4 and not q.signed
+    q = QInterval.from_fixed(True, 6, 3)  # fixed<6,3>: [-4, 3.875] step 1/8
+    assert (q.lo, q.hi, q.exp) == (-32, 31, -3)
+
+
+@given(qints, qints, st.integers(0, 12), st.sampled_from([1, -1]))
+@settings(max_examples=300, deadline=None)
+def test_add_shifted_is_exact_hull(qa, qb, shift, sign):
+    """Interval of a + sign*(b<<shift) is the exact reachable hull."""
+    q = qint_add_shifted(qa, qb, shift, sign)
+    # endpoints are reachable
+    for av in (qa.lo, qa.hi):
+        for bv in (qb.lo, qb.hi):
+            val_num = av * 2 ** (qa.exp - min(qa.exp, qb.exp + shift)) + sign * bv * 2 ** (
+                qb.exp + shift - min(qa.exp, qb.exp + shift)
+            )
+            assert q.lo <= val_num <= q.hi or qa.is_zero or qb.is_zero
+
+
+@given(qints)
+@settings(max_examples=200, deadline=None)
+def test_width_covers_range(q):
+    w = q.width
+    if q.is_zero:
+        assert w == 0
+        return
+    if q.signed:
+        assert -(2 ** (w - 1)) <= q.lo and q.hi <= 2 ** (w - 1) - 1
+        # minimal: w-1 bits would not fit
+        assert q.lo < -(2 ** (w - 2)) or q.hi > 2 ** (w - 2) - 1 or w == 1
+    else:
+        assert q.hi <= 2**w - 1
+        assert q.hi > 2 ** (w - 1) - 1 or w == 0
+
+
+def test_shift_and_neg():
+    q = QInterval(-3, 5, 0)
+    assert q.shift(3) == QInterval(-3, 5, 3)
+    assert q.neg() == QInterval(-5, 3, 0)
+    assert q.shift(3).msb == q.msb + 3
+
+
+def test_msb_lsb():
+    q = QInterval(0, 255, 0)
+    assert q.lsb == 0 and q.msb == 7
+    q = QInterval(0, 255, -4)
+    assert q.lsb == -4 and q.msb == 3

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import solve_cmvm
+from repro.kernels.adder_graph import adder_graph_apply, compile_tables
+from repro.kernels.adder_graph.ref import adder_graph_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ----------------------------------------------------------------------
+# adder_graph: Pallas kernel == jnp oracle == numpy DAIS == x @ M
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("d_in,d_out,bw,dc", [
+    (4, 4, 4, -1),
+    (8, 8, 8, -1),
+    (16, 12, 6, 2),
+    (12, 16, 8, 0),
+    (3, 7, 5, 1),
+])
+def test_adder_graph_kernel_exact(d_in, d_out, bw, dc):
+    rng = np.random.default_rng(d_in * 100 + d_out)
+    m = rng.integers(-(2 ** (bw - 1)), 2 ** (bw - 1), size=(d_in, d_out))
+    sol = solve_cmvm(m, dc=dc)
+    tables = compile_tables(sol.program)
+    x = rng.integers(-128, 128, size=(37, d_in)).astype(np.int32)
+    want = x.astype(np.int64) @ m
+    ref = adder_graph_ref(tables, jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(ref), want)
+    pallas = adder_graph_apply(tables, jnp.asarray(x), use_pallas=True, block_b=16)
+    np.testing.assert_array_equal(np.asarray(pallas), want)
+
+
+def test_adder_graph_batch_padding_and_lead_dims():
+    rng = np.random.default_rng(0)
+    m = rng.integers(-16, 16, size=(6, 5))
+    sol = solve_cmvm(m)
+    tables = compile_tables(sol.program)
+    x = rng.integers(-64, 64, size=(3, 11, 6)).astype(np.int32)
+    want = x.reshape(-1, 6).astype(np.int64) @ m
+    got = adder_graph_apply(tables, jnp.asarray(x), use_pallas=True, block_b=8)
+    np.testing.assert_array_equal(np.asarray(got).reshape(-1, 5), want)
+
+
+def test_adder_graph_zero_column_masked():
+    m = np.array([[3, 0], [5, 0]])
+    sol = solve_cmvm(m)
+    tables = compile_tables(sol.program)
+    x = jnp.asarray([[1, 2], [3, -4]], jnp.int32)
+    got = adder_graph_apply(tables, x, use_pallas=True, block_b=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x) @ m)
+
+
+# ----------------------------------------------------------------------
+# flash attention: sweep shapes / dtypes / causality / GQA groups
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+    (2, 4, 4, 128, 128, 64),     # MHA square
+    (1, 8, 2, 128, 128, 32),     # GQA 4:1
+    (2, 4, 1, 64, 256, 32),      # MQA, decode-ish (sq < sk)
+    (1, 2, 2, 256, 256, 128),    # larger head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, sk, d, causal, dtype):
+    key = jax.random.PRNGKey(b * 1000 + hq * 100 + sq + int(causal))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, sq, d), dtype)
+    k = jax.random.normal(kk, (b, hkv, sk, d), dtype)
+    v = jax.random.normal(kv, (b, hkv, sk, d), dtype)
+    want = attention_ref(q, k, v, causal=causal)
+    got = flash_attention(q, k, v, causal=causal, use_pallas=True,
+                          block_q=64, block_k=64)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=atol
+    )
+
+
+def test_flash_attention_decode_single_query():
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 8, 1, 64))
+    k = jax.random.normal(kk, (2, 2, 512, 64))
+    v = jax.random.normal(kv, (2, 2, 512, 64))
+    want = attention_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, use_pallas=True, block_q=1, block_k=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_attention_causal_masks_future():
+    """Perturbing future keys must not change causal output."""
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 2, 128, 32))
+    k = jax.random.normal(kk, (1, 2, 128, 32))
+    v = jax.random.normal(kv, (1, 2, 128, 32))
+    out1 = flash_attention(q, k, v, causal=True, use_pallas=True, block_q=64, block_k=64)
+    k2 = k.at[:, :, 64:, :].set(99.0)
+    v2 = v.at[:, :, 64:, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2, causal=True, use_pallas=True, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :64]), np.asarray(out2[:, :, :64]), atol=1e-6)

@@ -1,0 +1,81 @@
+"""Property-based end-to-end NN compiler exactness: random quantized
+Sequential models must compile to integer pipelines that bit-match the
+float forward (float64 reference) — the system-level invariant behind
+the paper's 'full numerical precision' claim."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nn import QuantConfig, apply_model, compile_model, init_params
+from repro.nn.layers import Flatten, MaxPool2D, QConv2D, QDense, ReLU
+
+jax.config.update("jax_enable_x64", True)
+
+
+@st.composite
+def mlp_models(draw):
+    n_layers = draw(st.integers(1, 4))
+    d_in = draw(st.integers(2, 10))
+    wq = QuantConfig(draw(st.integers(3, 8)), 2)
+    aq = QuantConfig(draw(st.integers(4, 9)), draw(st.integers(2, 4)), signed=False)
+    layers = []
+    for i in range(n_layers):
+        layers.append(QDense(draw(st.integers(2, 12)), wq))
+        if i < n_layers - 1:
+            layers.append(ReLU(aq))
+    in_quant = QuantConfig(8, draw(st.integers(2, 5)), signed=True)
+    dc = draw(st.sampled_from([-1, 0, 2]))
+    return tuple(layers), (d_in,), in_quant, dc
+
+
+@given(mlp_models(), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_random_mlp_bit_exact(spec, seed):
+    model, in_shape, in_quant, dc = spec
+    params, _ = init_params(jax.random.PRNGKey(seed % 2**31), model, in_shape)
+    design = compile_model(model, params, in_shape, in_quant, dc=dc)
+    rng = np.random.default_rng(seed)
+    x = jax.numpy.asarray(
+        rng.uniform(in_quant.lo, in_quant.hi, size=(8, *in_shape)), jax.numpy.float64
+    )
+    want = apply_model(params, model, x, in_quant=in_quant)
+    got = design.forward(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(0, 10**6), st.integers(3, 5))
+@settings(max_examples=6, deadline=None)
+def test_random_conv_bit_exact(seed, filters):
+    model = (
+        QConv2D(filters, (3, 3), w_quant=QuantConfig(5, 2)),
+        ReLU(QuantConfig(7, 3, signed=False)),
+        MaxPool2D((2, 2)),
+        Flatten(),
+        QDense(4, QuantConfig(5, 2)),
+    )
+    in_shape = (8, 8, 2)
+    in_quant = QuantConfig(6, 1, signed=False)
+    params, _ = init_params(jax.random.PRNGKey(seed % 2**31), model, in_shape)
+    design = compile_model(model, params, in_shape, in_quant, dc=2)
+    rng = np.random.default_rng(seed)
+    x = jax.numpy.asarray(
+        rng.uniform(0, in_quant.hi, size=(3, *in_shape)), jax.numpy.float64
+    )
+    want = apply_model(params, model, x, in_quant=in_quant)
+    got = design.forward(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_compiled_design_da_never_more_adders_than_latency():
+    """DA strategy should never use more adders across random models."""
+    rng = np.random.default_rng(0)
+    for seed in range(3):
+        model = (QDense(16, QuantConfig(6, 2)), ReLU(QuantConfig(8, 4, signed=False)),
+                 QDense(8, QuantConfig(6, 2)))
+        params, _ = init_params(jax.random.PRNGKey(seed), model, (12,))
+        da = compile_model(model, params, (12,), QuantConfig(8, 4), strategy="da")
+        base = compile_model(model, params, (12,), QuantConfig(8, 4), strategy="latency")
+        assert da.total_adders <= base.total_adders

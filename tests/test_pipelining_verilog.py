@@ -1,0 +1,58 @@
+"""Pipelining + Verilog emission: structural invariants (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import emit_verilog, pipeline, solve_cmvm
+from repro.core.dais import KIND_INPUT
+
+
+@given(st.integers(2, 8), st.integers(2, 8), st.integers(0, 10**6), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_pipeline_invariants(d_in, d_out, seed, mdps):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(-64, 64, size=(d_in, d_out))
+    sol = solve_cmvm(m)
+    rep = pipeline(sol.program, max_delay_per_stage=mdps)
+    prog = sol.program
+    for i, r in enumerate(prog.rows):
+        if r.kind == KIND_INPUT:
+            assert rep.stage_of_row[i] == 0
+            continue
+        ops = [r.a] if r.b < 0 else [r.a, r.b]
+        # operands never live in a later stage
+        assert all(rep.stage_of_row[o] <= rep.stage_of_row[i] for o in ops)
+        # intra-stage depth bounded by the threshold
+        assert 1 <= rep.intra_depth[i] <= mdps
+    assert rep.n_stages >= 1
+    assert rep.latency_cycles == rep.n_stages - 1
+    # ceil(depth / mdps) stages are necessary and sufficient
+    assert rep.n_stages - 1 <= -(-sol.depth // mdps)
+
+
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_verilog_structure(d_in, d_out, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.integers(-32, 32, size=(d_in, d_out))
+    sol = solve_cmvm(m)
+    v = emit_verilog(sol.program, "m0", max_delay_per_stage=3)
+    assert v.count("module ") == 1 and v.count("endmodule") == 1
+    assert v.count("input wire signed") == d_in
+    assert v.count("output wire signed") == d_out
+    # every adder row appears as exactly one assign
+    n_assign_ops = sum(
+        1 for line in v.splitlines() if "assign" in line and ("+" in line or "-" in line)
+    )
+    assert n_assign_ops >= sol.n_adders - sum(
+        1 for t in sol.program.outputs if t is not None and t.sign < 0
+    )
+
+
+def test_verilog_combinational_has_no_clock():
+    m = np.array([[3, -5], [7, 2]])
+    sol = solve_cmvm(m)
+    v = emit_verilog(sol.program, "comb", max_delay_per_stage=None)
+    assert "clk" not in v and "posedge" not in v

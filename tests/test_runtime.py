@@ -1,0 +1,225 @@
+"""Distributed-runtime substrate: optimizers, checkpointing + crash
+recovery, deterministic data, serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import RunConfig
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import init_params
+from repro.optim import make_adafactor, make_adamw
+from repro.optim.quantized_state import dequantize, quantize
+from repro.serve.engine import Engine, Request
+from repro.train import checkpoint
+from repro.train.train_lib import Trainer, make_train_step
+
+
+# ----------------------------------------------------------------------
+# optimizers
+# ----------------------------------------------------------------------
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (32, 16), jnp.float32),
+        "b": jnp.zeros((16,)),
+        "deep": [{"u": jax.random.normal(k2, (16, 8))}],
+    }
+
+
+def _quad_loss(p, x):
+    h = jnp.tanh(x @ p["w"] + p["b"])
+    return jnp.sum((h @ p["deep"][0]["u"]) ** 2) / x.shape[0]
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: make_adamw(),
+    lambda: make_adamw(master_dtype=None),
+    lambda: make_adamw(state_dtype="int8"),
+    lambda: make_adafactor(),
+])
+def test_optimizers_descend(make_opt):
+    init, update = make_opt()
+    key = jax.random.PRNGKey(0)
+    params = _toy_params(key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    state = init(params)
+    l0 = float(_quad_loss(params, x))
+    for _ in range(20):
+        grads = jax.grad(_quad_loss)(params, x)
+        params, state = update(grads, state, params, 1e-2)
+    assert float(_quad_loss(params, x)) < l0 * 0.7
+
+
+def test_int8_state_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1000,)) * 3.0
+    z = quantize(x, signed=True)
+    err = jnp.abs(dequantize(z) - x).max() / jnp.abs(x).max()
+    assert float(err) < 0.02
+    x = jnp.abs(x)
+    z = quantize(x, signed=False)
+    assert float(jnp.abs(dequantize(z) - x).max() / x.max()) < 0.01
+    assert z.q.dtype == jnp.uint8
+
+
+def test_adamw_bf16_params():
+    init, update = make_adamw(master_dtype="float32")
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = init(params)
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_params, state = update(grads, state, params, 0.1)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert state.master["w"].dtype == jnp.float32
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_pipeline_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=8, seed=3)
+    p1, p2 = Pipeline(cfg), Pipeline(cfg)
+    b1 = p1.batch_at(17)
+    b2 = p2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(18)["tokens"], b1["tokens"])
+    s0 = p1.batch_at(17, shard=0, n_shards=2)
+    s1 = p1.batch_at(17, shard=1, n_shards=2)
+    assert s0["tokens"].shape[0] == 4
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_pipeline_markov_learnable():
+    cfg = DataConfig(vocab_size=256, seq_len=128, global_batch=4, seed=5)
+    b = Pipeline(cfg).batch_at(0)
+    # the chain re-visits states: token distribution must be non-uniform
+    _, counts = np.unique(b["tokens"], return_counts=True)
+    assert counts.max() > 3 * counts.mean()
+
+
+# ----------------------------------------------------------------------
+# checkpoint + trainer fault tolerance
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10), "b": [jnp.ones((3, 3)), jnp.zeros(2)]}
+    checkpoint.save(str(tmp_path), 5, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 5
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out = checkpoint.restore(str(tmp_path), 5, like)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_gc_and_atomicity(tmp_path):
+    tree = {"a": jnp.arange(4)}
+    for s in range(6):
+        checkpoint.save(str(tmp_path), s, tree, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2 and kept[-1] == "step_00000005"
+
+
+def _trainer_setup(tmp_path, ckpt_every=2):
+    cfg = configs.get_smoke("smollm-135m")
+    run_cfg = RunConfig(
+        learning_rate=1e-3,
+        warmup_steps=2,
+        checkpoint_every=ckpt_every,
+        checkpoint_dir=str(tmp_path),
+        microbatch=1,
+    )
+    pipe = Pipeline(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4, seed=0)
+    )
+    train_step, opt_init = make_train_step(cfg, run_cfg)
+    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+    init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, run_cfg, pipe, init_fn, jit_step, opt_init
+
+
+def test_trainer_loss_decreases(tmp_path):
+    _, run_cfg, pipe, init_fn, jit_step, opt_init = _trainer_setup(tmp_path)
+    t = Trainer.resume_or_init(None, run_cfg, pipe, init_fn, jit_step, opt_init)
+    first = t._one_step()
+    losses = [t._one_step()["loss"] for _ in range(30)]
+    assert losses[-1] < first["loss"]
+
+
+def test_trainer_crash_recovery_resumes_exactly(tmp_path):
+    """Crash at step 5; recovery must resume from the last checkpoint and
+    reach the same final state as an uninterrupted run (determinism)."""
+    _, run_cfg, pipe, init_fn, jit_step, opt_init = _trainer_setup(tmp_path, ckpt_every=2)
+
+    # uninterrupted reference
+    t_ref = Trainer.resume_or_init(None, run_cfg, pipe, init_fn, jit_step, opt_init)
+    for _ in range(8):
+        t_ref._one_step()
+    ref_leaves = [np.asarray(x) for x in jax.tree.leaves(t_ref.params)]
+
+    # crashing run (fresh dir)
+    run_cfg2 = RunConfig(**{**run_cfg.__dict__, "checkpoint_dir": str(tmp_path) + "_b"})
+    t = Trainer.resume_or_init(None, run_cfg2, pipe, init_fn, jit_step, opt_init)
+    boom = {"armed": True}
+
+    def fail_hook(step):
+        if step == 5 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    t.run(8, fail_hook=fail_hook)
+    assert t.step == 8
+    got_leaves = [np.asarray(x) for x in jax.tree.leaves(t.params)]
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_allclose(a.astype(np.float32), b.astype(np.float32), atol=2e-5)
+
+
+def test_microbatch_equivalence(tmp_path):
+    """grad accumulation over 2 microbatches ~= single big batch."""
+    cfg = configs.get_smoke("smollm-135m")
+    base = dict(learning_rate=1e-3, warmup_steps=1, checkpoint_dir=str(tmp_path))
+    rc1 = RunConfig(microbatch=1, **base)
+    rc2 = RunConfig(microbatch=2, **base)
+    pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    s1, oi1 = make_train_step(cfg, rc1)
+    s2, oi2 = make_train_step(cfg, rc2)
+    p1, _, m1 = s1(params, oi1(params), batch, 0)
+    p2, _, m2 = s2(params, oi2(params), batch, 0)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=2e-5
+        )
+
+
+# ----------------------------------------------------------------------
+# serving engine
+# ----------------------------------------------------------------------
+def test_engine_generates():
+    cfg = configs.get_smoke("stablelm-3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=2, max_seq=48, eos_id=-123)
+    reqs = [
+        Request(np.arange(8, dtype=np.int32), max_new_tokens=6),
+        Request(np.arange(8, dtype=np.int32) + 1, max_new_tokens=4),
+    ]
+    out = eng.generate(reqs)
+    assert len(out[0].out_tokens) == 6
+    assert len(out[1].out_tokens) == 4
+    assert all(0 <= t < cfg.padded_vocab for t in out[0].out_tokens)
+
+
+def test_engine_deterministic_greedy():
+    cfg = configs.get_smoke("stablelm-3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, batch_size=1, max_seq=32, eos_id=-1)
+        r = eng.generate([Request(np.arange(8, dtype=np.int32), 5)])
+        outs.append(r[0].out_tokens)
+    assert outs[0] == outs[1]
