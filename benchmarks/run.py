@@ -4,6 +4,7 @@
     table3_4_resources      Tables 3-4 (resource proxies, 8/4-bit)
     tables5_12_networks     Tables 5-12 (network-level DA vs latency)
     fig7_runtime_scaling    Fig. 7 (solver runtime scaling)
+    solver_smoke            solver fast-path wall-clock budget check
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline numbers live in
@@ -20,6 +21,7 @@ def main() -> None:
     from . import (
         fig7_runtime_scaling,
         lm_step_bench,
+        solver_smoke,
         table2_random_matrices,
         table3_4_resources,
         tables5_12_networks,
@@ -30,6 +32,7 @@ def main() -> None:
         "table34": table3_4_resources,
         "networks": tables5_12_networks,
         "fig7": fig7_runtime_scaling,
+        "smoke": solver_smoke,
         "lm": lm_step_bench,
     }
     for name, mod in mods.items():

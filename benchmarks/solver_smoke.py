@@ -1,0 +1,57 @@
+"""Solver fast-path budget check.
+
+Solves one random 64 x 64 8-bit matrix (the Fig. 7 stress point: 22.4 s
+at the seed on the reference machine) and fails if the wall clock
+exceeds ``budget_s`` or the solution is not bit-exact.  Prints the same
+``name,us_per_call,derived`` CSV as the other benches; exit code 1 on
+budget/exactness failure when run as a script, so it doubles as a CI
+guard against solver performance regressions.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import solve_cmvm
+
+SEED_REFERENCE_S = 22.4  # seed solve_cmvm on the reference machine
+
+
+def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0):
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
+    t0 = time.perf_counter()
+    sol = solve_cmvm(mat, dc=dc)
+    dt = time.perf_counter() - t0
+    return {
+        "m": m,
+        "seconds": dt,
+        "budget_s": budget_s,
+        "within_budget": dt <= budget_s,
+        "adders": sol.n_adders,
+        "cost_bits": sol.cost_bits,
+        "verified": sol.verify(),
+        "speedup_vs_seed_ref": SEED_REFERENCE_S / dt,
+    }
+
+
+def main(csv=True):
+    r = run()
+    if csv:
+        print("name,us_per_call,derived")
+        print(
+            f"solver_smoke_m{r['m']},{r['seconds']*1e6:.0f},"
+            f"adders={r['adders']};cost_bits={r['cost_bits']};"
+            f"budget_s={r['budget_s']};within_budget={int(r['within_budget'])};"
+            f"verified={int(r['verified'])};"
+            f"speedup_vs_seed_ref={r['speedup_vs_seed_ref']:.1f}x"
+        )
+    return r
+
+
+if __name__ == "__main__":
+    result = main()
+    sys.exit(0 if (result["within_budget"] and result["verified"]) else 1)

@@ -8,11 +8,14 @@ are embedded for a side-by-side delta.
 
 from __future__ import annotations
 
+import concurrent.futures
+import multiprocessing
 import time
 
 import numpy as np
 
-from repro.core import naive_adder_tree, solve_cmvm
+from repro.core import QInterval, SolutionCache, naive_adder_tree, solve_cmvm
+from repro.core.solver import solve_task
 
 # (m, dc) -> (paper_depth, paper_adders) from Table 2 (da4ml columns)
 PAPER = {
@@ -62,6 +65,33 @@ def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0):
     return rows
 
 
+def solve_wall(m=16, dc=2, n_mats=8, bw=8, seed=1, jobs=1, cache=None):
+    """Wall-clock to solve ``n_mats`` independent matrices — the unit of
+    work a model compile farms out per layer (see compile_model jobs=)."""
+    rng = np.random.default_rng(seed)
+    qin = [QInterval.from_fixed(True, 8, 8)] * m
+    payloads = [
+        (rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m)), qin, "da", dc)
+        for _ in range(n_mats)
+    ]
+    t0 = time.perf_counter()
+    if cache is not None:
+        sols = [solve_cmvm(p[0], dc=dc, cache=cache) for p in payloads]
+    elif jobs > 1:
+        try:
+            with concurrent.futures.ProcessPoolExecutor(
+                jobs, mp_context=multiprocessing.get_context("fork")
+            ) as ex:
+                sols = list(ex.map(solve_task, payloads))
+        except Exception:
+            sols = [solve_task(p) for p in payloads]
+    else:
+        sols = [solve_task(p) for p in payloads]
+    wall = time.perf_counter() - t0
+    assert all(s.verify() for s in sols)
+    return wall
+
+
 def main(csv=True):
     rows = run()
     if csv:
@@ -75,6 +105,24 @@ def main(csv=True):
                 f"ratio={ratio:.3f};depth={r['depth']:.1f};paperdepth={r['paper_depth']};"
                 f"baseline={r['baseline_adders']:.0f}"
             )
+        # fast-path wiring: pool + content-addressed cache over one batch
+        import os
+
+        jobs = min(os.cpu_count() or 1, 4)
+        t_serial = solve_wall(jobs=1)
+        t_par = solve_wall(jobs=jobs)
+        cache = SolutionCache()
+        solve_wall(cache=cache)  # populate
+        t_cached = solve_wall(cache=cache)
+        print(f"table2_solve_wall_serial,{t_serial*1e6:.0f},n_mats=8;m=16;dc=2")
+        print(
+            f"table2_solve_wall_jobs{jobs},{t_par*1e6:.0f},"
+            f"speedup={t_serial/max(t_par,1e-9):.2f}x"
+        )
+        print(
+            f"table2_solve_wall_cached,{t_cached*1e6:.0f},"
+            f"speedup={t_serial/max(t_cached,1e-9):.0f}x"
+        )
     return rows
 
 

@@ -11,8 +11,9 @@ Public API:
     emit_verilog      standalone RTL generation
 """
 
+from .cache import CacheStats, SolutionCache, solve_key
 from .csd import csd_nnz, csd_span, from_csd, to_csd, vector_csd_nnz
-from .cost import adder_cost, ceil_log2, min_tree_depth, overlap_bits
+from .cost import adder_cost, ceil_log2, min_tree_depth, min_tree_depth_hist, overlap_bits
 from .cse import CSE
 from .dais import DAISProgram, Term
 from .fixed_point import QInterval
@@ -23,11 +24,13 @@ from .verilog import emit_verilog
 
 __all__ = [
     "CSE",
+    "CacheStats",
     "DAISProgram",
     "Decomposition",
     "PipelineReport",
     "QInterval",
     "Solution",
+    "SolutionCache",
     "Term",
     "adder_cost",
     "ceil_log2",
@@ -37,9 +40,11 @@ __all__ = [
     "emit_verilog",
     "from_csd",
     "min_tree_depth",
+    "min_tree_depth_hist",
     "naive_adder_tree",
     "overlap_bits",
     "pipeline",
+    "solve_key",
     "solve_cmvm",
     "to_csd",
     "vector_csd_nnz",

@@ -89,6 +89,36 @@ def min_tree_depth(depths: Iterable[int]) -> int:
     return h[0]
 
 
+def min_tree_depth_hist(hist: dict) -> int:
+    """``min_tree_depth`` over a depth histogram ``{depth: count}``.
+
+    Equivalent to expanding the histogram into a leaf list, but O(distinct
+    depths) instead of O(n log n): within one depth level, greedy pairwise
+    merging sends ceil(n/2) nodes to the next level (an odd leftover at
+    depth d merges with the next-shallowest node at some d' > d, yielding
+    d' + 1 — exactly as if it already sat at depth d'), and a lone node
+    floats up to the next populated level unchanged.
+    """
+    items = sorted((d, c) for d, c in hist.items() if c > 0)
+    if not items:
+        return 0
+    carry = 0
+    pos = 0
+    for d, c in items:
+        if carry == 0:
+            pos, carry = d, c
+            continue
+        while pos < d and carry > 1:
+            carry = (carry + 1) // 2
+            pos += 1
+        pos = d  # a lone leftover merges as if at the deeper level
+        carry += c
+    while carry > 1:
+        carry = (carry + 1) // 2
+        pos += 1
+    return pos
+
+
 def lut_estimate(cost_bits: int) -> int:
     """FPGA LUT estimate: ~1 LUT per full/half adder bit (6-input LUTs
     with carry chains absorb one result bit each on UltraScale+)."""

@@ -171,6 +171,55 @@ class DAISProgram:
         return new
 
     # ------------------------------------------------------------------
+    # Array round-trip (solution cache / disk serialization)
+    # ------------------------------------------------------------------
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Pack the program into plain int64 numpy arrays.
+
+        The row table stores (kind, a, b, sh_a, sh_b, sign, depth, cost,
+        q_lo, q_hi, q_exp); outputs store (present, sign, row, shift).
+        Exact round-trip via :meth:`from_arrays` — qints are stored, not
+        recomputed.  Raises ``OverflowError`` if an interval endpoint does
+        not fit in int64 (callers should then skip caching).
+        """
+        lim = 1 << 62
+        rows = np.empty((len(self.rows), 11), dtype=np.int64)
+        for i, r in enumerate(self.rows):
+            q = r.qint
+            if not (-lim < q.lo <= q.hi < lim):
+                raise OverflowError("qint endpoints exceed int64 range")
+            rows[i] = (
+                r.kind, r.a, r.b, r.sh_a, r.sh_b, r.sign, r.depth, r.cost,
+                q.lo, q.hi, q.exp,
+            )
+        outs = np.zeros((len(self.outputs), 4), dtype=np.int64)
+        for i, t in enumerate(self.outputs):
+            if t is not None:
+                outs[i] = (1, t.sign, t.row, t.shift)
+        return {
+            "rows": rows,
+            "outputs": outs,
+            "n_inputs": np.array([self.n_inputs], dtype=np.int64),
+        }
+
+    @staticmethod
+    def from_arrays(arrays: dict[str, np.ndarray]) -> "DAISProgram":
+        """Exact inverse of :meth:`to_arrays`."""
+        prog = DAISProgram()
+        prog.n_inputs = int(arrays["n_inputs"][0])
+        for row in np.asarray(arrays["rows"], dtype=np.int64).tolist():
+            kind, a, b, sh_a, sh_b, sign, depth, cost, lo, hi, exp = row
+            prog.rows.append(
+                Row(kind, a, b, sh_a, sh_b, sign, QInterval(lo, hi, exp), depth, cost)
+            )
+        prog.outputs = [
+            Term(sign, row, shift) if present else None
+            for present, sign, row, shift in
+            np.asarray(arrays["outputs"], dtype=np.int64).tolist()
+        ]
+        return prog
+
+    # ------------------------------------------------------------------
     # Evaluation (exact, integer)
     # ------------------------------------------------------------------
     def evaluate(self, x: np.ndarray) -> np.ndarray:

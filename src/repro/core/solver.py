@@ -20,6 +20,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .cache import SolutionCache, solve_key
 from .cost import ceil_log2, min_tree_depth
 from .csd import csd_nnz
 from .cse import CSE, CSEStats
@@ -110,6 +111,7 @@ def solve_cmvm(
     depth_weight: float = 0.0,
     program: Optional[DAISProgram] = None,
     input_rows: Optional[Sequence[int]] = None,
+    cache: Optional[SolutionCache] = None,
 ) -> Solution:
     """Optimize ``y = x @ m`` into an adder graph.
 
@@ -125,17 +127,36 @@ def solve_cmvm(
         where the decomposition is provably trivial).
     program / input_rows : optionally extend an existing program whose
         rows ``input_rows`` are this CMVM's inputs (NN layer chaining).
+    cache : optional content-addressed :class:`SolutionCache`; only used
+        on the fresh-program path (not when extending via ``program``).
     """
     t0 = time.perf_counter()
     m_int, scale_exp = _integerize(m)
     d_in, d_out = m_int.shape
 
+    key = None
     if program is None:
         program = DAISProgram()
         if qint_in is None:
             qint_in = [QInterval.from_fixed(True, 8, 8)] * d_in
         if depth_in is None:
             depth_in = [0] * d_in
+        if cache is not None:
+            key = solve_key(
+                m_int,
+                qint_in,
+                depth_in,
+                dc=dc,
+                decompose_stage=decompose_stage,
+                weighted=weighted,
+                assembly_dedup=assembly_dedup,
+                depth_weight=depth_weight,
+                kind="da",
+            )
+            hit = cache.get(key)
+            if hit is not None:
+                hit.out_scale_exp = scale_exp
+                return hit
         input_rows = [program.add_input(q, d) for q, d in zip(qint_in, depth_in)]
     else:
         if input_rows is None:
@@ -205,7 +226,39 @@ def solve_cmvm(
     program.outputs = outputs
     pruned = program.prune()
     dt = time.perf_counter() - t0
-    return Solution(pruned, m_int, scale_exp, dc, dt, use_decomp, stats)
+    sol = Solution(pruned, m_int, scale_exp, dc, dt, use_decomp, stats)
+    if key is not None:
+        cache.put(key, sol)
+    return sol
+
+
+def default_solve_key(m_int, qint_in, depth_in, dc: int, kind: str = "da") -> str:
+    """Cache key for a ``solve_cmvm`` call that leaves every solver option
+    at its default (as ``compile_model``'s solve phase issues them).
+
+    The option values are read off ``solve_cmvm``'s signature so the key
+    can never drift from the defaults actually used to solve.
+    """
+    import inspect
+
+    sig = inspect.signature(solve_cmvm)
+    opts = {
+        name: sig.parameters[name].default
+        for name in ("decompose_stage", "weighted", "assembly_dedup", "depth_weight")
+    }
+    return solve_key(m_int, qint_in, depth_in, dc=dc, kind=kind, **opts)
+
+
+def solve_task(payload) -> "Solution":
+    """One CMVM solve from a picklable payload (w_int, qin, strategy, dc).
+
+    Lives in this jax-free module so process-pool workers (see
+    ``repro.nn.compiler``) import only numpy-land code.
+    """
+    w_int, qin, strategy, dc = payload
+    if strategy == "latency":
+        return naive_adder_tree(w_int, qint_in=qin)
+    return solve_cmvm(w_int, qint_in=qin, dc=dc)
 
 
 def naive_adder_tree(
@@ -232,9 +285,11 @@ def naive_adder_tree(
         {input_rows[i]: int(m_int[i, j]) for i in range(d_in) if m_int[i, j] != 0}
         for j in range(d_out)
     ]
-    cse = CSE(program, cols, [None] * d_out, weighted=False, assembly_dedup=False)
-    # skip the CSE loop entirely: assembly only
-    cse.heap = []
+    # skip the CSE loop entirely (no counts, empty heap): assembly only
+    cse = CSE(
+        program, cols, [None] * d_out, weighted=False, assembly_dedup=False,
+        build_counts=False,
+    )
     outputs = cse.run()
     program.outputs = outputs
     dt = time.perf_counter() - t0

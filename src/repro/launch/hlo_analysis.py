@@ -131,8 +131,12 @@ def parse_module(hlo: str) -> dict[str, Computation]:
         if ops_m:
             for tok in ops_m.group(1).split(","):
                 tok = tok.strip()
-                if tok.startswith("%"):
-                    operands.append(tok[1:])
+                if "%" in tok:
+                    # older XLA print options inline operand shapes
+                    # ("f32[512,1024]{1,0} %param"); commas inside the
+                    # shape split it into junk pieces, but exactly one
+                    # piece carries the %name.
+                    operands.extend(re.findall(r"%([\w.\-]+)", tok))
                 elif re.match(r"^[\w.\-]+$", tok) and not tok[0].isdigit():
                     operands.append(tok)
         name = m.group(2)

@@ -15,15 +15,26 @@ from __future__ import annotations
 import jax
 
 
+def _make_auto_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where supported.
+
+    ``jax.sharding.AxisType`` appeared after 0.4.x; on older versions
+    every axis is implicitly auto-sharded, so omitting the kwarg is
+    semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_auto_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU multi-device tests (device count forced by the
     test harness via subprocess)."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return _make_auto_mesh((data, model), ("data", "model"))

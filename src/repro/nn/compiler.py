@@ -20,15 +20,26 @@ tracked symbolically at compile time.
 
 from __future__ import annotations
 
+import concurrent.futures
+import multiprocessing
+import os
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.cache import SolutionCache, solve_key
 from ..core.fixed_point import QInterval
 from ..core.pipelining import pipeline
-from ..core.solver import Solution, naive_adder_tree, solve_cmvm
+from ..core.solver import (
+    Solution,
+    default_solve_key,
+    naive_adder_tree,
+    solve_cmvm,
+    solve_task,
+)
 from ..kernels.adder_graph import adder_graph_apply, compile_tables
 from .layers import (
     AvgPool2D,
@@ -63,6 +74,9 @@ class CompiledDesign:
     in_quant: Optional[QuantConfig] = None
     out_shape: tuple = ()
     out_qints: list[QInterval] = field(default_factory=list)
+    # solve-phase accounting: n_solves / n_cache_hits / n_pool_solves /
+    # solver_time_s (sum over unique CMVMs, ~0 when everything hits cache)
+    solver_stats: dict = field(default_factory=dict)
 
     @property
     def total_adders(self) -> int:
@@ -189,6 +203,40 @@ def _align_exps_step(qints_a, qints_b):
 # ----------------------------------------------------------------------
 # Compiler
 # ----------------------------------------------------------------------
+# compile_model runs in three phases:
+#
+#   plan    walk the layer graph, quantize weights, and propagate exact
+#           per-feature qints WITHOUT solving: the output interval of a
+#           CMVM is the exact affine range of y = x @ W (structure-
+#           independent), so downstream layers can be planned before any
+#           solver runs.  Each unique (matrix, qints, dc, strategy) is
+#           registered once as a _SolveSlot.
+#   solve   resolve the slots: content-addressed cache first, then the
+#           remaining solves either serially or farmed to a process pool
+#           (``jobs=``).  Results stitch back by slot identity, so the
+#           parallel path is bit-identical to the serial one.
+#   stitch  compile instruction tables, pipeline reports, and layer
+#           reports in original layer order.
+
+
+class _SolveSlot:
+    """One deferred CMVM solve.  After stitch, everything except the
+    compiled instruction tables is released (apply_fn closures keep the
+    slot alive for the design's lifetime, and the weight matrices /
+    solved programs would otherwise be pinned along with it)."""
+
+    __slots__ = ("w_int", "qin", "strategy", "dc", "key", "solution", "tables")
+
+    def __init__(self, w_int, qin, strategy, dc):
+        self.w_int = w_int
+        self.qin = qin
+        self.strategy = strategy
+        self.dc = dc
+        self.key = None
+        self.solution: Optional[Solution] = None
+        self.tables = None
+
+
 class _Ctx:
     def __init__(self, dc, strategy, mdps, use_pallas, design):
         self.dc = dc
@@ -196,6 +244,80 @@ class _Ctx:
         self.mdps = mdps
         self.use_pallas = use_pallas
         self.design = design
+        self.slots: list[_SolveSlot] = []
+        self.slot_map: dict = {}
+        self.pending_reports: list = []
+
+    def request(self, w_int: np.ndarray, qin: list[QInterval]) -> _SolveSlot:
+        dedup = (self.strategy, self.dc, w_int.shape, w_int.tobytes(), tuple(qin))
+        slot = self.slot_map.get(dedup)
+        if slot is None:
+            slot = _SolveSlot(w_int, qin, self.strategy, self.dc)
+            self.slot_map[dedup] = slot
+            self.slots.append(slot)
+        return slot
+
+
+def _slot_key(slot: _SolveSlot) -> str:
+    """Cache key; matches solve_cmvm's internal key for the "da" path
+    (options read off solve_cmvm's signature, so they cannot drift)."""
+    depth_in = [0] * len(slot.qin)
+    if slot.strategy == "latency":
+        return solve_key(slot.w_int, slot.qin, depth_in, kind="latency")
+    return default_solve_key(slot.w_int, slot.qin, depth_in, dc=slot.dc)
+
+
+def _solve_slots(
+    slots: list[_SolveSlot],
+    jobs: Optional[int],
+    cache: Optional[SolutionCache],
+) -> dict:
+    t0 = time.perf_counter()
+    n_hits = 0
+    misses: list[_SolveSlot] = []
+    for slot in slots:
+        if cache is not None:
+            slot.key = _slot_key(slot)
+            hit = cache.get(slot.key)
+            if hit is not None:
+                slot.solution = hit
+                n_hits += 1
+                continue
+        misses.append(slot)
+    n_pool = 0
+    if misses:
+        payloads = [(s.w_int, s.qin, s.strategy, s.dc) for s in misses]
+        results: Optional[list[Solution]] = None
+        jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
+        if jobs_eff != 1 and len(misses) > 1:
+            workers = min(jobs_eff, len(misses))
+            # Prefer forkserver: workers fork from a clean helper process
+            # and import only repro.core (numpy) — never jax, whose thread
+            # pools are not fork-safe.  Fall back to plain fork (workers
+            # run pure-numpy code only), then to serial.
+            for method in ("forkserver", "fork"):
+                try:
+                    with concurrent.futures.ProcessPoolExecutor(
+                        workers, mp_context=multiprocessing.get_context(method)
+                    ) as ex:
+                        results = list(ex.map(solve_task, payloads))
+                    n_pool = len(results)
+                    break
+                except Exception:
+                    results = None  # pool unavailable: try next method
+        if results is None:
+            results = [solve_task(p) for p in payloads]
+        for slot, sol in zip(misses, results):
+            slot.solution = sol
+            if cache is not None:
+                cache.put(slot.key, sol)
+    return {
+        "n_solves": len(misses),
+        "n_cache_hits": n_hits,
+        "n_pool_solves": n_pool,
+        "solver_time_s": sum(s.solution.solver_time_s for s in slots),
+        "solve_phase_s": time.perf_counter() - t0,
+    }
 
 
 def compile_model(
@@ -207,34 +329,80 @@ def compile_model(
     strategy: str = "da",
     max_delay_per_stage: int = 5,
     use_pallas: bool = False,
+    jobs: Optional[int] = None,
+    cache: Optional[SolutionCache] = None,
 ) -> CompiledDesign:
-    """Compile a quantized Sequential into a bit-exact integer design."""
+    """Compile a quantized Sequential into a bit-exact integer design.
+
+    ``jobs``: CMVM solver parallelism — None uses ``os.cpu_count()``,
+    1 forces in-process serial solves; any value produces bit-identical
+    designs.  ``cache``: optional :class:`SolutionCache` so repeated
+    compiles skip solved CMVMs entirely.
+    """
     design = CompiledDesign(in_quant=in_quant)
     ctx = _Ctx(dc, strategy, max_delay_per_stage, use_pallas, design)
     shape = tuple(in_shape)
     qints = [in_quant.qint] * int(np.prod(shape))
+    # plan
     steps, shape, qints = _compile_seq(model, params, shape, qints, ctx)
+    # solve
+    design.solver_stats = _solve_slots(ctx.slots, jobs, cache)
+    # stitch
+    for slot, name, shape_str, n_bias, bias_bits in ctx.pending_reports:
+        sol = slot.solution
+        if slot.tables is None:
+            slot.tables = compile_tables(sol.program)
+        rep = pipeline(sol.program, ctx.mdps)
+        design.reports.append(
+            LayerReport(
+                name=f"{name}[{ctx.strategy}]",
+                shape=shape_str,
+                adders=sol.n_adders + n_bias,
+                cost_bits=sol.cost_bits + bias_bits,
+                depth=sol.depth + (1 if n_bias else 0),
+                stages=rep.n_stages,
+                ff_bits=rep.ff_bits,
+                solver_time_s=sol.solver_time_s,
+            )
+        )
+    for slot in ctx.slots:
+        if slot.tables is None:
+            slot.tables = compile_tables(slot.solution.program)
+        slot.w_int = slot.qin = slot.solution = slot.key = None
     design.steps = steps
     design.out_shape = shape
     design.out_qints = qints
     return design
 
 
-def _solve(w_int, qin, ctx) -> Solution:
-    if ctx.strategy == "latency":
-        return naive_adder_tree(w_int, qint_in=qin)
-    return solve_cmvm(w_int, qint_in=qin, dc=ctx.dc)
+def _affine_out_qints(w_int: np.ndarray, qin: list[QInterval]) -> list[QInterval]:
+    """Exact per-output intervals of y = x @ w_int.
+
+    The adder graph computes each output exactly, so its value range is
+    the affine-form interval — independent of how the solver structures
+    the computation.  This is what lets the plan phase propagate qints
+    through the network before any CMVM is solved (and it is never wider
+    than interval propagation through the adder tree)."""
+    out: list[QInterval] = []
+    for jcol in range(w_int.shape[1]):
+        q: Optional[QInterval] = None
+        col = w_int[:, jcol]
+        for i in np.nonzero(col)[0]:
+            term = qin[int(i)].scale(int(col[i]))
+            q = term if q is None else q.add(term)
+        out.append(QInterval(0, 0, 0) if q is None else q)
+    return out
 
 
 def _cmvm(name, w, b, wq: QuantConfig, qin: list[QInterval], ctx: _Ctx):
-    """Compile one CMVM + bias. Returns (apply_fn [N,d_in]->[N,d_out], out_qints)."""
+    """Plan one CMVM + bias. Returns (apply_fn [N,d_in]->[N,d_out], out_qints);
+    the solve itself is deferred to a _SolveSlot."""
     w_int = np.clip(
         np.round(np.asarray(w, np.float64) / wq.step), wq.qint.lo, wq.qint.hi
     ).astype(np.int64)
     we = wq.scale_exp()
-    sol = _solve(w_int, qin, ctx)
-    tables = compile_tables(sol.program)
-    out_qints = [q.shift(we) for q in sol.program.output_qints()]
+    slot = ctx.request(w_int, list(qin))
+    out_qints = [q.shift(we) for q in _affine_out_qints(w_int, qin)]
 
     b_int = None
     pre_shift = None
@@ -254,22 +422,12 @@ def _cmvm(name, w, b, wq: QuantConfig, qin: list[QInterval], ctx: _Ctx):
             for q, bi, s, t in zip(out_qints, b_int, pre_shift, tgt)
         ]
 
-    rep = pipeline(sol.program, ctx.mdps)
     n_bias = int(np.count_nonzero(b_int)) if b_int is not None else 0
     bias_bits = (
         sum(q.width for q, bi in zip(out_qints, b_int) if bi) if b_int is not None else 0
     )
-    ctx.design.reports.append(
-        LayerReport(
-            name=f"{name}[{ctx.strategy}]",
-            shape=f"{w_int.shape[0]}x{w_int.shape[1]}",
-            adders=sol.n_adders + n_bias,
-            cost_bits=sol.cost_bits + bias_bits,
-            depth=sol.depth + (1 if n_bias else 0),
-            stages=rep.n_stages,
-            ff_bits=rep.ff_bits,
-            solver_time_s=sol.solver_time_s,
-        )
+    ctx.pending_reports.append(
+        (slot, name, f"{w_int.shape[0]}x{w_int.shape[1]}", n_bias, bias_bits)
     )
 
     bias_arr = jnp.asarray(b_int, jnp.int32) if b_int is not None else None
@@ -280,8 +438,8 @@ def _cmvm(name, w, b, wq: QuantConfig, qin: list[QInterval], ctx: _Ctx):
     )
     use_pallas = ctx.use_pallas
 
-    def apply_fn(v, tables=tables, bias=bias_arr, shift=shift_arr):
-        y = adder_graph_apply(tables, v, use_pallas=use_pallas)
+    def apply_fn(v, slot=slot, bias=bias_arr, shift=shift_arr):
+        y = adder_graph_apply(slot.tables, v, use_pallas=use_pallas)
         if shift is not None:
             y = y << shift
         return y + bias if bias is not None else y

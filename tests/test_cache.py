@@ -1,0 +1,105 @@
+"""Content-addressed solution cache: hit fidelity, key sensitivity,
+DAISProgram array round-trip, and disk persistence."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DAISProgram,
+    QInterval,
+    SolutionCache,
+    solve_cmvm,
+    solve_key,
+)
+
+
+def _mat(seed=0, m=12):
+    return np.random.default_rng(seed).integers(2**7 + 1, 2**8, size=(m, m))
+
+
+def test_cache_hit_evaluates_identically():
+    cache = SolutionCache()
+    m = _mat()
+    cold = solve_cmvm(m, dc=2, cache=cache)
+    hot = solve_cmvm(m, dc=2, cache=cache)
+    assert not cold.stats.get("cache_hit")
+    assert hot.stats.get("cache_hit")
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+    x = np.random.default_rng(1).integers(-128, 128, size=(32, m.shape[0]))
+    np.testing.assert_array_equal(cold.evaluate(x), hot.evaluate(x))
+    np.testing.assert_array_equal(hot.evaluate(x), x @ m)
+    assert hot.n_adders == cold.n_adders
+    assert hot.cost_bits == cold.cost_bits
+    assert hot.verify()
+
+
+def test_cache_key_changes_with_dc_and_qints():
+    m = _mat()
+    qin8 = [QInterval.from_fixed(True, 8, 8)] * m.shape[0]
+    qin6 = [QInterval.from_fixed(True, 6, 6)] * m.shape[0]
+    base = solve_key(m, qin8, [0] * m.shape[0], dc=2, kind="da")
+    assert solve_key(m, qin8, [0] * m.shape[0], dc=-1, kind="da") != base
+    assert solve_key(m, qin6, [0] * m.shape[0], dc=2, kind="da") != base
+    assert solve_key(m, qin8, [1] * m.shape[0], dc=2, kind="da") != base
+    assert solve_key(m + 1, qin8, [0] * m.shape[0], dc=2, kind="da") != base
+    assert solve_key(m, qin8, [0] * m.shape[0], dc=2, kind="da") == base
+    # end-to-end: changing dc or qints misses the cache
+    cache = SolutionCache()
+    solve_cmvm(m, dc=2, cache=cache)
+    s = solve_cmvm(m, dc=-1, cache=cache)
+    assert not s.stats.get("cache_hit")
+    s = solve_cmvm(m, qint_in=qin6, dc=2, cache=cache)
+    assert not s.stats.get("cache_hit")
+
+
+def test_program_array_round_trip_exact():
+    m = _mat(3)
+    sol = solve_cmvm(m, dc=2)
+    arrays = sol.program.to_arrays()
+    clone = DAISProgram.from_arrays(arrays)
+    assert clone.n_inputs == sol.program.n_inputs
+    assert len(clone.rows) == len(sol.program.rows)
+    assert clone.outputs == sol.program.outputs
+    for a, b in zip(clone.rows, sol.program.rows):
+        assert a == b
+    x = np.random.default_rng(2).integers(-128, 128, size=(16, m.shape[0]))
+    np.testing.assert_array_equal(clone.evaluate(x), sol.program.evaluate(x))
+    assert clone.cost_bits == sol.program.cost_bits
+    assert clone.depth == sol.program.depth
+
+
+def test_disk_round_trip(tmp_path):
+    m = _mat(5)
+    cache = SolutionCache(disk_dir=str(tmp_path))
+    cold = solve_cmvm(m, dc=2, cache=cache)
+    # a brand-new cache instance reads the same directory
+    cache2 = SolutionCache(disk_dir=str(tmp_path))
+    hot = solve_cmvm(m, dc=2, cache=cache2)
+    assert hot.stats.get("cache_hit")
+    assert cache2.stats.disk_hits == 1
+    x = np.random.default_rng(3).integers(-128, 128, size=(8, m.shape[0]))
+    np.testing.assert_array_equal(cold.evaluate(x), hot.evaluate(x))
+    assert hot.out_scale_exp == cold.out_scale_exp
+    assert hot.dc == cold.dc and hot.decomposed == cold.decomposed
+
+
+def test_fractional_scale_not_cached_wrong():
+    """Matrices that integerize identically must still get the caller's
+    scale exponent (the cache key covers the integer grid only)."""
+    cache = SolutionCache()
+    a = solve_cmvm(np.array([[1.0, 3.0]]), cache=cache)
+    b = solve_cmvm(np.array([[0.5, 1.5]]), cache=cache)
+    assert b.stats.get("cache_hit")
+    assert a.out_scale_exp == 0 and b.out_scale_exp == -1
+
+
+def test_lru_eviction():
+    cache = SolutionCache(max_items=2)
+    mats = [_mat(seed, m=4) for seed in range(3)]
+    for m in mats:
+        solve_cmvm(m, cache=cache)
+    assert len(cache) == 2
+    s = solve_cmvm(mats[0], cache=cache)  # evicted -> miss, re-solved
+    assert not s.stats.get("cache_hit")
+    s = solve_cmvm(mats[2], cache=cache)  # still resident
+    assert s.stats.get("cache_hit")

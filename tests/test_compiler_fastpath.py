@@ -1,0 +1,70 @@
+"""compile_model fast path: parallel per-layer solves and the solution
+cache must be invisible in the produced integers.
+
+Acceptance anchors: compile_model(jobs=N) is bit-identical to the serial
+path, and a second compile of the same model with a cache skips every
+solve (asserted via solver stats)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SolutionCache
+from repro.nn import compile_model, init_params, models
+
+
+@pytest.fixture(scope="module")
+def jet():
+    model, in_shape, in_quant = models.jet_tagger()
+    params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
+    return model, params, in_shape, in_quant
+
+
+def _int_input(in_shape, in_quant, batch=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = in_quant.qint
+    return np.asarray(
+        rng.integers(q.lo, q.hi + 1, size=(batch, *in_shape)), np.int32
+    )
+
+
+def test_parallel_compile_bit_identical(jet):
+    model, params, in_shape, in_quant = jet
+    serial = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
+    par = compile_model(model, params, in_shape, in_quant, dc=2, jobs=2)
+    xi = _int_input(in_shape, in_quant)
+    np.testing.assert_array_equal(
+        np.asarray(serial.forward_int(xi)), np.asarray(par.forward_int(xi))
+    )
+    # identical resource reports too (same solutions stitched)
+    assert [r.adders for r in serial.reports] == [r.adders for r in par.reports]
+    assert serial.total_cost_bits == par.total_cost_bits
+
+
+def test_second_compile_skips_all_solves(jet):
+    model, params, in_shape, in_quant = jet
+    cache = SolutionCache()
+    first = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    second = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    n_unique = first.solver_stats["n_solves"] + first.solver_stats["n_cache_hits"]
+    assert second.solver_stats["n_solves"] == 0
+    assert second.solver_stats["n_cache_hits"] == n_unique
+    # solver time on the cached compile is lookup-only (near-free)
+    assert second.solver_stats["solver_time_s"] < 0.1
+    assert second.solver_stats["solver_time_s"] * 20 < max(
+        first.solver_stats["solver_time_s"], 1e-3
+    )
+    xi = _int_input(in_shape, in_quant, seed=1)
+    np.testing.assert_array_equal(
+        np.asarray(first.forward_int(xi)), np.asarray(second.forward_int(xi))
+    )
+
+
+def test_solver_stats_populated(jet):
+    model, params, in_shape, in_quant = jet
+    design = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
+    st = design.solver_stats
+    assert st["n_solves"] >= 1
+    assert st["n_cache_hits"] == 0
+    assert st["solver_time_s"] > 0
+    assert len(design.reports) >= st["n_solves"]

@@ -13,8 +13,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_test_mesh
 
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_test_mesh(2, 4)  # version-compatible Auto-axis mesh
 out = {}
 
 # 1) scan with known trip count: flops must be trips * body

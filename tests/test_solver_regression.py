@@ -1,0 +1,95 @@
+"""Fixed-seed solver regression guardrails (hypothesis-free).
+
+These anchor the CSE fast path: bit-exactness must hold exactly, and
+adder/cost quality must not regress past the recorded baselines (taken
+after the vectorized-CSE refactor; the pre-refactor seed numbers were
+349/368 adders at 16x16 and 1231/1261 at 32x32, so the ceilings below
+also keep us within ~2% of the original solver's quality).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    min_tree_depth,
+    min_tree_depth_hist,
+    naive_adder_tree,
+    solve_cmvm,
+)
+
+# (m, seed, dc) -> max adders, max cost_bits  (recorded baseline + ~2%)
+BASELINES = {
+    (16, 42, -1): (355, 4960),
+    (16, 42, 2): (371, 5310),
+    (32, 43, -1): (1262, 17760),
+    (32, 43, 2): (1293, 18410),
+}
+
+
+def _mat(m, seed):
+    return np.random.default_rng(seed).integers(2**7 + 1, 2**8, size=(m, m))
+
+
+@pytest.mark.parametrize("m,seed,dc", sorted(BASELINES))
+def test_fixed_seed_quality_and_exactness(m, seed, dc):
+    mat = _mat(m, seed)
+    sol = solve_cmvm(mat, dc=dc)
+    assert sol.verify(), "adder graph must compute x @ M bit-exactly"
+    max_adders, max_cost = BASELINES[(m, seed, dc)]
+    assert sol.n_adders <= max_adders, (
+        f"adder regression: {sol.n_adders} > baseline {max_adders}"
+    )
+    assert sol.cost_bits <= max_cost, (
+        f"cost regression: {sol.cost_bits} > baseline {max_cost}"
+    )
+
+
+@pytest.mark.parametrize("m,seed", [(16, 42), (32, 43)])
+def test_da_beats_naive_tree(m, seed):
+    mat = _mat(m, seed)
+    da = solve_cmvm(mat, dc=-1)
+    base = naive_adder_tree(mat)
+    assert da.n_adders < base.n_adders
+    assert da.cost_bits < base.cost_bits
+    # exactness of both, against the same integer product
+    x = np.random.default_rng(0).integers(-128, 128, size=(32, m))
+    np.testing.assert_array_equal(da.evaluate(x), x @ mat)
+    np.testing.assert_array_equal(base.evaluate(x), x @ mat)
+
+
+def test_solver_deterministic():
+    mat = _mat(16, 42)
+    a = solve_cmvm(mat, dc=2)
+    b = solve_cmvm(mat, dc=2)
+    assert a.n_adders == b.n_adders
+    assert a.cost_bits == b.cost_bits
+    x = np.random.default_rng(1).integers(-128, 128, size=(16, 16))
+    np.testing.assert_array_equal(a.evaluate(x), b.evaluate(x))
+
+
+def test_depth_budget_still_respected():
+    """The histogram-memoized delay simulation must honour dc budgets."""
+    from repro.core import ceil_log2, csd_nnz
+
+    mat = _mat(16, 44)
+    for dc in (0, 1, 2):
+        sol = solve_cmvm(mat, dc=dc)
+        assert sol.verify()
+        nnz = csd_nnz(mat)
+        for j, t in enumerate(sol.program.outputs):
+            budget = ceil_log2(int(nnz[:, j].sum())) + dc
+            assert sol.program.rows[t.row].depth <= budget
+
+
+def test_min_tree_depth_hist_matches_heap_version():
+    rng = np.random.default_rng(7)
+    for _ in range(2000):
+        depths = rng.integers(0, 9, size=rng.integers(0, 14)).tolist()
+        hist: dict[int, int] = {}
+        for d in depths:
+            hist[d] = hist.get(d, 0) + 1
+        assert min_tree_depth_hist(hist) == min_tree_depth(depths), depths
+    # zero-count entries must be ignored
+    assert min_tree_depth_hist({3: 0}) == 0
+    assert min_tree_depth_hist({}) == 0
+    assert min_tree_depth_hist({2: 1, 5: 0}) == 2
