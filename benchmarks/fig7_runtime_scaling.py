@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import SolutionCache, solve_cmvm
 
 
-def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None):
+def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None,
+        engine="batch"):
     """Solve one random m x m matrix per size; with a cache, also time the
     warm re-solve (content-addressed hit, no CSE run)."""
     rng = np.random.default_rng(seed)
@@ -26,13 +27,13 @@ def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None):
             break
         mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
         t0 = time.perf_counter()
-        sol = solve_cmvm(mat, dc=-1, cache=cache)
+        sol = solve_cmvm(mat, dc=-1, cache=cache, engine=engine)
         dt = time.perf_counter() - t0
         spent += dt
         row = {"m": m, "N": m * m * bw, "seconds": dt, "adders": sol.n_adders}
         if cache is not None:
             t0 = time.perf_counter()
-            hot = solve_cmvm(mat, dc=-1, cache=cache)
+            hot = solve_cmvm(mat, dc=-1, cache=cache, engine=engine)
             row["cached_seconds"] = time.perf_counter() - t0
             assert hot.stats.get("cache_hit") and hot.n_adders == sol.n_adders
         rows.append(row)

@@ -7,39 +7,52 @@
     solver_smoke            solver fast-path wall-clock budget check
     lm_step_bench           framework substrate microbench
 
-Prints ``name,us_per_call,derived`` CSV.  Roofline numbers live in
-EXPERIMENTS.md (derived from the dry-run, see repro.launch.dryrun).
+Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
+additionally writes the smoke result as JSON (the CI perf artifact) and
+exits 1 if the smoke budget/exactness/engine-equivalence gate fails.
+Roofline numbers live in EXPERIMENTS.md (derived from the dry-run, see
+repro.launch.dryrun).
 """
 
 from __future__ import annotations
 
+import importlib
 import sys
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    from . import (
-        fig7_runtime_scaling,
-        lm_step_bench,
-        solver_smoke,
-        table2_random_matrices,
-        table3_4_resources,
-        tables5_12_networks,
-    )
-
+    args = [a for a in sys.argv[1:]]
+    json_path = None
+    if "--json" in args:
+        k = args.index("--json")
+        if k + 1 >= len(args):
+            sys.exit("usage: benchmarks.run [name] --json PATH")
+        json_path = args[k + 1]
+        del args[k : k + 2]
+    only = args[0] if args else None
+    # modules are imported lazily so jax-free benches (e.g. `smoke`, which
+    # only needs numpy + repro.core) run in minimal environments
     mods = {
-        "table2": table2_random_matrices,
-        "table34": table3_4_resources,
-        "networks": tables5_12_networks,
-        "fig7": fig7_runtime_scaling,
-        "smoke": solver_smoke,
-        "lm": lm_step_bench,
+        "table2": "table2_random_matrices",
+        "table34": "table3_4_resources",
+        "networks": "tables5_12_networks",
+        "fig7": "fig7_runtime_scaling",
+        "smoke": "solver_smoke",
+        "lm": "lm_step_bench",
     }
-    for name, mod in mods.items():
+    failed = False
+    for name, modname in mods.items():
         if only and only != name:
             continue
+        mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        mod.main()
+        if name == "smoke":
+            result = mod.main(json_path=json_path)
+            failed = failed or not mod.passed(result)
+        else:
+            mod.main()
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,15 +1,23 @@
 """Solver fast-path budget check.
 
 Solves one random 64 x 64 8-bit matrix (the Fig. 7 stress point: 22.4 s
-at the seed on the reference machine) and fails if the wall clock
-exceeds ``budget_s`` or the solution is not bit-exact.  Prints the same
-``name,us_per_call,derived`` CSV as the other benches; exit code 1 on
-budget/exactness failure when run as a script, so it doubles as a CI
-guard against solver performance regressions.
+at the seed, ~3.1 s after PR 1, ~1.5-2 s with the batch CSE engine on
+the reference machine) with the default ``engine="batch"`` and fails if
+the wall clock exceeds ``budget_s`` or the solution is not bit-exact.
+It then re-solves with ``engine="heap"`` and fails unless the adder
+count (and cost bits) are identical — the cross-engine guard of the
+batch-scored CSE rewrite.
+
+Prints the same ``name,us_per_call,derived`` CSV as the other benches
+and optionally writes the full result dict as JSON (``--json PATH``, or
+``benchmarks/run.py smoke --json PATH``) so CI can archive a perf
+trajectory across PRs.  Exit code 1 on budget/exactness/equivalence
+failure when run as a script.
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -18,16 +26,20 @@ import numpy as np
 from repro.core import solve_cmvm
 
 SEED_REFERENCE_S = 22.4  # seed solve_cmvm on the reference machine
+PR1_REFERENCE_S = 3.1  # after PR 1's solver fast path (lazy heap engine)
 
 
-def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0):
+def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0, check_heap_engine=True):
     rng = np.random.default_rng(seed)
     mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
     t0 = time.perf_counter()
-    sol = solve_cmvm(mat, dc=dc)
+    sol = solve_cmvm(mat, dc=dc, engine="batch")
     dt = time.perf_counter() - t0
-    return {
+    result = {
         "m": m,
+        "bw": bw,
+        "dc": dc,
+        "engine": "batch",
         "seconds": dt,
         "budget_s": budget_s,
         "within_budget": dt <= budget_s,
@@ -35,23 +47,57 @@ def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0):
         "cost_bits": sol.cost_bits,
         "verified": sol.verify(),
         "speedup_vs_seed_ref": SEED_REFERENCE_S / dt,
+        "speedup_vs_pr1_ref": PR1_REFERENCE_S / dt,
     }
+    if check_heap_engine:
+        t0 = time.perf_counter()
+        heap_sol = solve_cmvm(mat, dc=dc, engine="heap")
+        result["heap_seconds"] = time.perf_counter() - t0
+        result["heap_adders"] = heap_sol.n_adders
+        result["engines_identical"] = (
+            heap_sol.n_adders == sol.n_adders
+            and heap_sol.cost_bits == sol.cost_bits
+        )
+    return result
 
 
-def main(csv=True):
+def passed(r: dict) -> bool:
+    return bool(
+        r["within_budget"] and r["verified"] and r.get("engines_identical", True)
+    )
+
+
+def main(csv=True, json_path=None):
     r = run()
     if csv:
         print("name,us_per_call,derived")
         print(
             f"solver_smoke_m{r['m']},{r['seconds']*1e6:.0f},"
-            f"adders={r['adders']};cost_bits={r['cost_bits']};"
+            f"engine=batch;adders={r['adders']};cost_bits={r['cost_bits']};"
             f"budget_s={r['budget_s']};within_budget={int(r['within_budget'])};"
             f"verified={int(r['verified'])};"
-            f"speedup_vs_seed_ref={r['speedup_vs_seed_ref']:.1f}x"
+            f"speedup_vs_seed_ref={r['speedup_vs_seed_ref']:.1f}x;"
+            f"speedup_vs_pr1_ref={r['speedup_vs_pr1_ref']:.1f}x"
         )
+        if "heap_seconds" in r:
+            print(
+                f"solver_smoke_m{r['m']}_heap,{r['heap_seconds']*1e6:.0f},"
+                f"engine=heap;adders={r['heap_adders']};"
+                f"engines_identical={int(r['engines_identical'])}"
+            )
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", file=sys.stderr)
     return r
 
 
 if __name__ == "__main__":
-    result = main()
-    sys.exit(0 if (result["within_budget"] and result["verified"]) else 1)
+    json_path = None
+    if "--json" in sys.argv:
+        k = sys.argv.index("--json")
+        if k + 1 >= len(sys.argv):
+            sys.exit("usage: solver_smoke [--json PATH]")
+        json_path = sys.argv[k + 1]
+    result = main(json_path=json_path)
+    sys.exit(0 if passed(result) else 1)

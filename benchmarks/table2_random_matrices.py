@@ -31,7 +31,8 @@ PAPER = {
 }
 
 
-def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0):
+def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0,
+        engine="batch"):
     rng = np.random.default_rng(seed)
     rows = []
     for m in sizes:
@@ -44,7 +45,7 @@ def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0):
             adders, depths, times = [], [], []
             for mat in mats:
                 t0 = time.perf_counter()
-                sol = solve_cmvm(mat, dc=dc)
+                sol = solve_cmvm(mat, dc=dc, engine=engine)
                 times.append(time.perf_counter() - t0)
                 assert sol.verify(), "bit-exactness violated"
                 adders.append(sol.n_adders)
@@ -65,18 +66,20 @@ def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0):
     return rows
 
 
-def solve_wall(m=16, dc=2, n_mats=8, bw=8, seed=1, jobs=1, cache=None):
+def solve_wall(m=16, dc=2, n_mats=8, bw=8, seed=1, jobs=1, cache=None,
+               engine="batch"):
     """Wall-clock to solve ``n_mats`` independent matrices — the unit of
     work a model compile farms out per layer (see compile_model jobs=)."""
     rng = np.random.default_rng(seed)
     qin = [QInterval.from_fixed(True, 8, 8)] * m
     payloads = [
-        (rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m)), qin, "da", dc)
+        (rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m)), qin, "da", dc,
+         engine)
         for _ in range(n_mats)
     ]
     t0 = time.perf_counter()
     if cache is not None:
-        sols = [solve_cmvm(p[0], dc=dc, cache=cache) for p in payloads]
+        sols = [solve_cmvm(p[0], dc=dc, cache=cache, engine=engine) for p in payloads]
     elif jobs > 1:
         try:
             with concurrent.futures.ProcessPoolExecutor(

@@ -24,7 +24,8 @@ run_cfg = RunConfig(
 pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=0))
 step_fn, opt_init = make_train_step(cfg, run_cfg)
 jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
-init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+def init_fn():
+    return init_params(cfg, jax.random.PRNGKey(0))
 
 print(f"training {cfg.name} ({cfg.param_count():,} params), ckpts -> {ckpt_dir}")
 trainer = Trainer.resume_or_init(cfg, run_cfg, pipe, init_fn, jit_step, opt_init)

@@ -10,8 +10,7 @@ instead of O(n_layers) while supporting heterogeneous stacks (Jamba's
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 ATTN, SSM = "attn", "ssm"

@@ -21,9 +21,9 @@ Key differences from prior art that this module reproduces:
     (relative shift ``s`` is part of the key, not a uniform row/column
     shift as in MCMT [13]) and across *signed digits* (``sign`` in key),
     unlike Scalable CMVM [57];
-  * selection is most-frequent-first via a cached frequency table (a
-    lazy max-heap here), not the O(|L_impl|^2) one-step-lookahead of
-    [4, 14] — the paper measures the lookahead is worth <2% adders;
+  * selection is most-frequent-first via a cached frequency table, not
+    the O(|L_impl|^2) one-step-lookahead of [4, 14] — the paper measures
+    the lookahead is worth <2% adders;
   * frequency is weighted by the *operand bit overlap* (paper §4.4): the
     cost model (Eq. 1) prefers operands with similar bitwidths/shifts, but
     weighting by full cost would reward half-adder overhead bits; overlap
@@ -32,30 +32,56 @@ Key differences from prior art that this module reproduces:
     rejected if the column's minimal achievable merge-tree depth would
     exceed its budget.
 
+Selection semantics (shared by both engines, enforced identical by
+test): repeatedly implement the key with the maximum priority
+``count * weight`` among keys with ``count >= 2`` that are not dormant,
+breaking priority ties toward the smallest packed key.  A key whose
+implementation fails (all occurrences depth-rejected, or fewer than two
+disjoint occurrences survive) goes *dormant* and is reconsidered only
+when its count next increases.
+
+Two interchangeable engines realise this rule
+(``engine="batch"`` is the default; see docs/solver_performance.md):
+
+  * ``engine="heap"`` — exact lazy max-heap of ``(-priority, key)``
+    entries with lazy deletion: a fresh entry is pushed whenever a key's
+    count increases, so for every eligible key some entry bounds its
+    current priority from above; stale entries are corrected (or
+    discarded) at pop time.
+  * ``engine="batch"`` — generation-stamped top-k candidate array.
+    Cached priorities are upper bounds (counts only decay without a
+    re-append); each implementation step bumps a generation counter, and
+    an entry's cached score is exact iff its stamp is current.  One
+    selection round takes the running max of the cached scores,
+    re-scores the stale entries *at that value* in one vectorized sweep,
+    and implements the smallest exact winner — the common path performs
+    zero heap operations.  Keys outside the top-k array live in a
+    deferred *rest* tier summarised by one stale upper bound; only when
+    the running best decays to that bound is the tier re-scored (one
+    vectorized sweep) and re-partitioned.
+
 Performance notes (the solver fast path; see docs/solver_performance.md):
 
-  * pattern keys are packed int64s, so the count update after replacing a
-    pattern's occurrences is ONE vectorized signed-delta batch per
-    implementation step (removed/added digits against the live stores,
-    all accepted columns concatenated), deduplicated with a single
-    ``np.unique`` and written back through C-level ``map(dict.get, ...)``
-    / ``dict.update`` — no per-pair Python loop;
-  * the lazy max-heap tracks exact membership (``_inheap``): a key is
-    (re)inserted only when it gains pairs while absent, when its stored
-    priority is stale at pop time, or after an implementation leaves it
-    viable — instead of one heap entry per count increment;
+  * pattern keys are packed int64s; the initial pair-count table is built
+    in a single vectorized pass (one ``_canon_pack`` + one ``np.unique``
+    over every column's upper-triangle pairs at once);
+  * the count update after an implementation step is ONE signed-delta
+    batch (removed/added digits against the live stores, all accepted
+    columns concatenated into a single packed-key array), deduplicated
+    with a single ``np.unique`` and applied through the vectorized
+    open-addressed :class:`_CountTable`;
   * ``row_cols`` maps each program row to the set of columns that may
     hold its digits (pruned lazily when a scan finds none), so locating a
     pattern's columns is one set intersection — no per-(key, column)
     count bookkeeping on the hot path;
-  * heap priorities (overlap-bit weights) are computed vectorized from
+  * priorities (overlap-bit weights) are computed vectorized from
     per-row ``lsb/msb/depth`` metadata arrays synced with the program;
-  * the delay-constraint simulation in ``_implement`` works on a
-    per-column depth *histogram*: replacing k occurrences shifts exactly
+  * the delay-constraint simulation in ``_implement`` evaluates a whole
+    candidate batch per trial: replacing k occurrences shifts exactly
     k digits of row i and k of row j onto the new row's depth, so the
-    feasibility of the k-th acceptance is :func:`min_tree_depth_hist` on
-    an O(distinct depths) histogram instead of ``min_tree_depth`` over
-    the whole column per occurrence.
+    feasibility of every acceptance count k = 1..n is one
+    :func:`min_tree_depth_hist_batch` call on an O(distinct depths)
+    histogram instead of n scalar tree simulations.
 """
 
 from __future__ import annotations
@@ -66,7 +92,7 @@ from typing import Optional
 
 import numpy as np
 
-from .cost import min_tree_depth_hist, overlap_bits  # noqa: F401  (re-export)
+from .cost import min_tree_depth_hist, min_tree_depth_hist_batch, overlap_bits  # noqa: F401
 from .csd import to_csd
 from .dais import DAISProgram, Term
 
@@ -84,6 +110,12 @@ from .dais import DAISProgram, Term
 _ROW_BITS = 21
 _ROW_MASK = (1 << _ROW_BITS) - 1
 _S_OFF = 1 << 14
+
+# batch engine: size of the active candidate tier (the rest is deferred
+# behind a single stale upper bound).  1024 won the sweep in
+# docs/solver_performance.md: small enough that the per-selection running
+# max is cheap, large enough that the stale bound effectively never binds.
+_TIER = 1024
 
 
 def _pack_keys(r1, r2, s, sg):
@@ -156,10 +188,11 @@ class _CountTable:
 
     def add_batch(self, k: np.ndarray, delta: np.ndarray) -> np.ndarray:
         """counts[k] += delta for unique keys; returns the new counts."""
-        # grow until the worst case (every key new) fits under 60% load —
-        # a single under-sized growth step could leave the table full and
+        # grow until the worst case (every key new) fits under 33% load —
+        # probes then almost always resolve in one vectorized round, and a
+        # single under-sized growth step could leave the table full and
         # turn the linear probe into an infinite loop
-        while (self.n + k.shape[0]) * 5 > (self.mask + 1) * 3:
+        while (self.n + k.shape[0]) * 3 > self.mask + 1:
             self._grow()
         slots = self._slots_claim(k)
         new = self.vals[slots] + delta
@@ -216,6 +249,74 @@ def _triu(m: int) -> tuple[np.ndarray, np.ndarray]:
     if hit is None:
         hit = _TRIU_CACHE[m] = np.triu_indices(m, k=1)
     return hit
+
+
+def _concat3(parts: list[tuple]) -> tuple:
+    """Concatenate a list of (rows, poss, digs) triples componentwise."""
+    if len(parts) == 1:
+        return parts[0]
+    return (
+        np.concatenate([t[0] for t in parts]),
+        np.concatenate([t[1] for t in parts]),
+        np.concatenate([t[2] for t in parts]),
+    )
+
+
+def _step_pairs(sets: list[tuple], snaps: list[tuple], set_signs: list[int]):
+    """All digit pairs one implementation step contributes for a list of
+    per-column digit sets: each set element against every live digit of
+    its column's (post-removal) store snapshot, plus the pairs within the
+    set itself.  Columns are processed as one block-structured cross
+    product — A-side components repeated per element, B-side gathered
+    through a block-local index — so the whole step (removed and added
+    sets together) needs a handful of numpy ops instead of per-column
+    tiling.  Returns componentwise (A, B) tuples plus the per-pair count
+    delta sign (the A-side set's sign), or None for an empty step."""
+    cat_a = _concat3(sets)
+    cat_s = _concat3(snaps)
+    m = np.array([t[0].shape[0] for t in sets], dtype=np.int64)
+    n = np.array([t[0].shape[0] for t in snaps], dtype=np.int64)
+    sgn = np.asarray(set_signs, dtype=np.int64)
+    a_parts: list[list] = [[], [], []]
+    b_parts: list[list] = [[], [], []]
+    s_parts: list[np.ndarray] = []
+    reps = np.repeat(n, m)  # pairs per set element
+    total = int(reps.sum())
+    if total:
+        ends = np.cumsum(reps)
+        off_elem = np.repeat(np.cumsum(n) - n, m)  # store offset per element
+        gidx = np.arange(total, dtype=np.int64) - np.repeat(
+            ends - reps - off_elem, reps
+        )
+        for q in range(3):
+            a_parts[q].append(np.repeat(cat_a[q], reps))
+            b_parts[q].append(cat_s[q][gidx])
+        s_parts.append(np.repeat(np.repeat(sgn, m), reps))
+    ii_parts: list[np.ndarray] = []
+    jj_parts: list[np.ndarray] = []
+    tri_n = np.zeros(len(sets), dtype=np.int64)
+    off = 0
+    for si, t in enumerate(sets):
+        mm = t[0].shape[0]
+        if mm > 1:
+            ii, jj = _triu(mm)
+            tri_n[si] = ii.shape[0]
+            ii_parts.append(ii + off)
+            jj_parts.append(jj + off)
+        off += mm
+    if ii_parts:
+        ii = np.concatenate(ii_parts) if len(ii_parts) > 1 else ii_parts[0]
+        jj = np.concatenate(jj_parts) if len(jj_parts) > 1 else jj_parts[0]
+        for q in range(3):
+            a_parts[q].append(cat_a[q][ii])
+            b_parts[q].append(cat_a[q][jj])
+        s_parts.append(np.repeat(sgn, tri_n))
+    if not a_parts[0]:
+        return None
+    a = tuple(np.concatenate(p) if len(p) > 1 else p[0] for p in a_parts)
+    b = tuple(np.concatenate(p) if len(p) > 1 else p[0] for p in b_parts)
+    s = np.concatenate(s_parts) if len(s_parts) > 1 else s_parts[0]
+    return a, b, s
 
 
 class _ColStore:
@@ -292,6 +393,10 @@ class CSEStats:
     n_occurrences_replaced: int = 0
     n_rejected_by_depth: int = 0
     n_assembly_adders: int = 0
+    # engine introspection (batch: tier reloads / stale-entry corrections;
+    # heap: pops that had to correct or discard a stale entry)
+    n_tier_reloads: int = 0
+    n_stale_corrections: int = 0
 
 
 class CSE:
@@ -304,12 +409,16 @@ class CSE:
         assembly_dedup: bool = True,
         depth_weight: float = 0.0,
         *,
+        engine: str = "batch",
         build_counts: bool = True,
     ) -> None:
+        if engine not in ("heap", "batch"):
+            raise ValueError(f"unknown CSE engine {engine!r}")
         self.prog = prog
         self.budgets = budgets if budgets is not None else [None] * len(coeff_cols)
         self.weighted = weighted
         self.assembly_dedup = assembly_dedup
+        self.engine = engine
         # beyond-paper: under tight delay budgets, prefer subexpressions
         # with shallow operands (they leave headroom for further reuse
         # before the per-output depth budget binds):
@@ -339,16 +448,24 @@ class CSE:
         self.counts = _CountTable(1 << 8)
         # program row -> columns that may contain digits of that row
         self.row_cols: dict[int, set[int]] = {}
-        self.heap: list[tuple[float, int, int]] = []
-        self._seq = 0
         self._weights: dict[int, float] = {}
-        # keys believed to have a live heap entry.  Pop discards the flag
-        # even when duplicate entries remain: a key may be re-pushed
-        # spuriously (harmless extra entry) but is never lost while viable.
-        self._inheap: set[int] = set()
+        # keys whose last implementation attempt failed; excluded from
+        # selection until their count next increases
+        self._dormant: set[int] = set()
         self._impl_cache: dict[int, int] = {}
         self._combine_cache: dict[tuple, Term] = {}
-        self._deferred: Optional[np.ndarray] = None  # low-priority tier
+
+        # engine="heap": (-priority, key) entries, lazy deletion
+        self.heap: list[tuple[float, int]] = []
+        # engine="batch": active candidate arrays + deferred rest tier
+        self._gen = 0
+        self._an = 0
+        self._akeys = np.empty(0, dtype=np.int64)
+        self._apri = np.empty(0, dtype=np.float64)
+        self._awt = np.empty(0, dtype=np.float64)  # static per-key weights
+        self._agen = np.empty(0, dtype=np.int64)
+        self._rest: Optional[np.ndarray] = None
+        self._rest_bound = -np.inf
 
         # Per-program-row metadata mirrors (lsb, msb, depth, is_zero) for
         # vectorized weight computation; synced lazily as rows are added.
@@ -390,7 +507,7 @@ class CSE:
         self._meta_n = n
 
     def _weights_vec(self, keys: np.ndarray) -> np.ndarray:
-        """Vectorized heap weights for an array of packed keys."""
+        """Vectorized priority weights for an array of packed keys."""
         self._sync_meta()
         rest = keys >> 1
         s = (rest & 0xFFFF) - _S_OFF
@@ -416,8 +533,9 @@ class CSE:
         return w
 
     def _weight(self, key: int) -> float:
-        """Scalar weight; bitwise-identical to :meth:`_weights_vec` (the
-        run-loop staleness test compares the two with float equality)."""
+        """Scalar weight; bitwise-identical to :meth:`_weights_vec` (both
+        engines compare the two with exact float equality, so the scalar
+        and vector paths must stay in lockstep)."""
         w = self._weights.get(key)
         if w is not None:
             return w
@@ -458,118 +576,189 @@ class CSE:
                 cols.add(c)
 
     def _build_initial_counts(self) -> None:
-        key_arrays: list[np.ndarray] = []
-        cnt_arrays: list[np.ndarray] = []
+        # One vectorized pass: concatenate every column's live digits,
+        # offset each column's cached upper-triangle indices into the
+        # concatenated frame, then pack and count ALL pairs with one
+        # _canon_pack + np.unique — no per-column tables or gathers.
+        parts: list[tuple] = []
+        ii_parts: list[np.ndarray] = []
+        jj_parts: list[np.ndarray] = []
+        off = 0
         for c, store in enumerate(self.cols):
             n = len(store)
             if n < 2:
                 continue
             rows, poss, digs = store.live()
             self._register_rows(rows, c)
+            parts.append((rows, poss, digs))
             ii, jj = _triu(n)
-            packed = _canon_pack(
-                rows[ii], poss[ii], digs[ii], rows[jj], poss[jj], digs[jj]
-            )
-            uniq, cnt = np.unique(packed, return_counts=True)
-            key_arrays.append(uniq)
-            cnt_arrays.append(cnt)
-        if not key_arrays:
+            ii_parts.append(ii + off)
+            jj_parts.append(jj + off)
+            off += n
+        if not parts:
             return
-        keys_cat = np.concatenate(key_arrays)
-        cnts_cat = np.concatenate(cnt_arrays)
-        uniq, inv = np.unique(keys_cat, return_inverse=True)
-        sums = np.bincount(inv, weights=cnts_cat.astype(np.float64)).astype(np.int64)
+        cat = _concat3(parts)
+        ii = np.concatenate(ii_parts) if len(ii_parts) > 1 else ii_parts[0]
+        jj = np.concatenate(jj_parts) if len(jj_parts) > 1 else jj_parts[0]
+        packed = _canon_pack(
+            cat[0][ii], cat[1][ii], cat[2][ii],
+            cat[0][jj], cat[1][jj], cat[2][jj],
+        )
+        uniq, cnt = np.unique(packed, return_counts=True)
+        sums = cnt.astype(np.int64)
         cap = 1 << 16
-        while uniq.shape[0] * 2 > cap:
+        while uniq.shape[0] * 3 > cap:
             cap *= 2
         self.counts = _CountTable(cap)
         self.counts.add_batch(uniq, sums)
         mask = sums >= 2
         keys2, cnts2 = uniq[mask], sums[mask]
-        # Lazy tier loading: seed the heap with the top-priority tier only
-        # and defer the long tail.  Deferred keys are reconsidered when the
-        # heap drains (run() -> _refill), by which point most have fallen
-        # below 2 occurrences and are never pushed at all.  Order is
-        # near-max-first, not exact: a deferred key never rises without
-        # being re-inserted through the delta path, but an in-heap key
-        # whose count decays below the tier boundary is still implemented
-        # before the deferred tier loads.  Measured effect on adder counts
-        # is within the greedy tie-break noise (<1%, see
-        # docs/solver_performance.md and tests/test_solver_regression.py).
-        if keys2.shape[0] > 4096:
-            pris = cnts2 * self._weights_vec(keys2)
-            lo = pris < np.quantile(pris, 0.8)
-            self._deferred = keys2[lo]
-            keys2, cnts2 = keys2[~lo], cnts2[~lo]
-        self._push_batch(keys2, cnts2)
+        if keys2.shape[0] == 0:
+            return
+        wts = self._weights_vec(keys2)
+        pris = cnts2 * wts
+        if self.engine == "heap":
+            self.heap = list(zip((-pris).tolist(), keys2.tolist()))
+            heapq.heapify(self.heap)
+            return
+        # batch engine: seed the active tier with the top-k priorities and
+        # summarise the rest behind one stale upper bound.  The bound stays
+        # valid because a deferred key's count can only decrease without
+        # routing through _apply_deltas's increase path, which re-appends
+        # it to the active tier at its exact new priority.
+        if keys2.shape[0] > _TIER:
+            thr = np.partition(pris, pris.shape[0] - _TIER)[pris.shape[0] - _TIER]
+            hi = pris >= thr
+            lo_pris = pris[~hi]
+            if lo_pris.shape[0]:
+                self._rest = keys2[~hi]
+                self._rest_bound = float(lo_pris.max())
+            keys2, pris, wts = keys2[hi], pris[hi], wts[hi]
+        self._active_append(keys2, pris, wts)
 
-    def _push_batch(self, keys: np.ndarray, cnts: np.ndarray) -> None:
+    def _active_append(self, keys: np.ndarray, pris: np.ndarray,
+                       wts: np.ndarray) -> None:
+        """Append exact-scored entries to the active tier (stamped with the
+        current generation)."""
+        m = keys.shape[0]
+        if m == 0:
+            return
+        if self._an + m > self._akeys.shape[0]:
+            self._compact(m)
+        k = self._an
+        self._akeys[k : k + m] = keys
+        self._apri[k : k + m] = pris
+        self._awt[k : k + m] = wts
+        self._agen[k : k + m] = self._gen
+        self._an = k + m
+
+    def _compact(self, m: int) -> None:
+        """Drop dead entries; if the live tier still exceeds 2x _TIER,
+        demote everything below the top-_TIER cached priorities back to
+        the rest tier (their cached scores are upper bounds, so folding
+        them into the stale bound keeps selection exact) — the running-max
+        scan stays O(_TIER) for the whole run."""
+        live = self._apri[: self._an] > 0.0
+        an = int(live.sum())
+        ak = self._akeys[: self._an][live]
+        ap = self._apri[: self._an][live]
+        aw = self._awt[: self._an][live]
+        ag = self._agen[: self._an][live]
+        if an > 2 * _TIER:
+            thr = np.partition(ap, an - _TIER)[an - _TIER]
+            hi = ap >= thr
+            demoted_keys = ak[~hi]
+            demoted_pris = ap[~hi]
+            if demoted_keys.shape[0]:
+                if self._rest is None:
+                    self._rest = demoted_keys
+                    self._rest_bound = float(demoted_pris.max())
+                else:
+                    self._rest = np.concatenate([self._rest, demoted_keys])
+                    self._rest_bound = max(
+                        self._rest_bound, float(demoted_pris.max())
+                    )
+            ak, ap, aw, ag = ak[hi], ap[hi], aw[hi], ag[hi]
+            an = ak.shape[0]
+        cap = max(self._akeys.shape[0], 1024)
+        while an + m > cap:
+            cap *= 2
+        for name, src, dt in (
+            ("_akeys", ak, np.int64), ("_apri", ap, np.float64),
+            ("_awt", aw, np.float64), ("_agen", ag, np.int64),
+        ):
+            buf = np.empty(cap, dtype=dt)
+            buf[:an] = src
+            setattr(self, name, buf)
+        self._an = an
+
+    def _reload_rest(self) -> None:
+        """Re-score the deferred tier in one vectorized sweep and
+        re-partition it (called when the running best decays to the stale
+        bound, so a deferred key could now be the global max)."""
+        rest, self._rest = self._rest, None
+        self._rest_bound = -np.inf
+        self.stats.n_tier_reloads += 1
+        cnts = self.counts.get_batch(rest)
+        viable = cnts >= 2
+        if self._dormant and viable.any():
+            dorm = np.fromiter(
+                (k in self._dormant for k in rest.tolist()), bool, rest.shape[0]
+            )
+            viable &= ~dorm
+        keys = rest[viable]
         if keys.shape[0] == 0:
             return
-        pris = -(cnts * self._weights_vec(keys))
-        seq = self._seq
-        heap = self.heap
-        inheap = self._inheap
-        for key, pri in zip(keys.tolist(), pris.tolist()):
-            heapq.heappush(heap, (pri, seq, key))
-            inheap.add(key)
-            seq += 1
-        self._seq = seq
+        wts = self._weights_vec(keys)
+        pris = cnts[viable] * wts
+        if keys.shape[0] > _TIER:
+            thr = np.partition(pris, pris.shape[0] - _TIER)[pris.shape[0] - _TIER]
+            hi = pris >= thr
+            lo_pris = pris[~hi]
+            if lo_pris.shape[0]:
+                self._rest = keys[~hi]
+                self._rest_bound = float(lo_pris.max())
+            keys, pris, wts = keys[hi], pris[hi], wts[hi]
+        self._active_append(keys, pris, wts)
 
-    def _push(self, key: int, cnt: int) -> None:
-        heapq.heappush(self.heap, (-cnt * self._weight(key), self._seq, key))
-        self._inheap.add(key)
-        self._seq += 1
-
-    def _pairs_against(self, store: _ColStore, rows, poss, digs) -> np.ndarray:
-        """Packed keys of a digit set against every live digit plus the
-        pairs within the set itself (flat array, with multiplicity)."""
-        out = []
-        if store.n:
-            R, P, D = store.live()
-            out.append(
-                _canon_pack(
-                    rows[:, None], poss[:, None], digs[:, None],
-                    R[None, :], P[None, :], D[None, :],
-                ).ravel()
-            )
-        m = rows.shape[0]
-        if m > 1:
-            ii, jj = _triu(m)
-            out.append(
-                _canon_pack(rows[ii], poss[ii], digs[ii], rows[jj], poss[jj], digs[jj])
-            )
-        if not out:
-            return np.zeros(0, dtype=np.int64)
-        return np.concatenate(out) if len(out) > 1 else out[0]
-
-    def _apply_deltas(self, rem_parts: list, add_parts: list) -> None:
-        """One signed-delta count update for a whole implementation step."""
-        parts = rem_parts + add_parts
-        if not parts:
-            return
-        keys = np.concatenate(parts)
+    def _apply_deltas(self, keys: np.ndarray, signs: np.ndarray) -> None:
+        """One signed-delta count update for a whole implementation step
+        (``signs``: -1 for removed digit pairs, +1 for added ones).  Keys
+        whose count increased to >= 2 leave dormancy and are (re)inserted
+        into the engine's candidate pool at their exact new priority.
+        """
         if not keys.shape[0]:
             return
-        n_rem = sum(a.shape[0] for a in rem_parts)
-        signs = np.ones(keys.shape[0], dtype=np.float64)
-        signs[:n_rem] = -1.0
-        uniq, inv = np.unique(keys, return_inverse=True)
-        delta = np.bincount(inv, weights=signs).astype(np.int64)
+        order = np.argsort(keys)
+        sk = keys[order]
+        first = np.empty(sk.shape[0], dtype=bool)
+        first[0] = True
+        np.not_equal(sk[1:], sk[:-1], out=first[1:])
+        starts = np.flatnonzero(first)
+        uniq = sk[starts]
+        delta = np.add.reduceat(signs[order], starts)
         changed = delta != 0
         uniq = uniq[changed]
         delta = delta[changed]
+        if not uniq.shape[0]:
+            return
+        self._gen += 1  # cached batch-engine scores may now be stale
         new = self.counts.add_batch(uniq, delta)
-        # (re)insert keys that became viable while absent from the heap
         pmask = (delta > 0) & (new >= 2)
         if pmask.any():
-            inheap = self._inheap
             pkeys = uniq[pmask]
-            absent = np.array(
-                [k not in inheap for k in pkeys.tolist()], dtype=bool
-            )
-            if absent.any():
-                self._push_batch(pkeys[absent], new[pmask][absent])
+            wts = self._weights_vec(pkeys)
+            pris = new[pmask] * wts
+            if self._dormant:
+                dormant = self._dormant
+                for k in pkeys.tolist():
+                    dormant.discard(k)
+            if self.engine == "heap":
+                heap = self.heap
+                for key, neg in zip(pkeys.tolist(), (-pris).tolist()):
+                    heapq.heappush(heap, (neg, key))
+            else:
+                self._active_append(pkeys, pris, wts)
 
     # ------------------------------------------------------------------
     # Occurrence search
@@ -625,42 +814,89 @@ class CSE:
     # Main loop
     # ------------------------------------------------------------------
     def run(self) -> list[Optional[Term]]:
+        if self.engine == "heap":
+            self._run_heap()
+        else:
+            self._run_batch()
+        return self._assemble()
+
+    def _run_heap(self) -> None:
+        """Exact lazy max-heap realisation of the selection rule."""
         counts = self.counts
-        inheap = self._inheap
+        dormant = self._dormant
         heap = self.heap
-        while heap or self._refill():
-            neg_pri, _, key = heapq.heappop(heap)
-            inheap.discard(key)
+        while heap:
+            neg_pri, key = heapq.heappop(heap)
+            if key in dormant:
+                continue
             cnt = counts.get(key)
             if cnt < 2:
                 continue
-            cur_pri = cnt * self._weight(key)
-            if -neg_pri > cur_pri + 1e-9 or -neg_pri < cur_pri - 1e-9:
-                self._push(key, cnt)  # stale either way: correct and re-sort
+            cur = cnt * self._weight(key)
+            if -neg_pri != cur:
+                self.stats.n_stale_corrections += 1
+                if -neg_pri > cur:
+                    # stale-high: this entry may be the key's only cover
+                    heapq.heappush(heap, (-cur, key))
+                # stale-low: a fresher entry pushed by the count increase
+                # already bounds the key from above — drop this one
                 continue
-            implemented = self._implement(key)
-            # keep viable keys represented in the heap
-            cnt = counts.get(key)
-            if implemented and cnt >= 2 and key not in inheap:
-                self._push(key, cnt)
-        return self._assemble()
+            if self._implement(key):
+                cnt = counts.get(key)
+                if cnt >= 2:
+                    heapq.heappush(heap, (-cnt * self._weight(key), key))
+            else:
+                dormant.add(key)
 
-    def _refill(self) -> bool:
-        """Load the deferred low-priority tier once the heap drains."""
-        deferred, self._deferred = self._deferred, None
-        if deferred is None:
-            return False
-        inheap = self._inheap
-        cnts = self.counts.get_batch(deferred)
-        viable = cnts >= 2
-        if viable.any():
-            viable &= np.array(
-                [k not in inheap for k in deferred.tolist()], dtype=bool
-            )
-        if not viable.any():
-            return False
-        self._push_batch(deferred[viable], cnts[viable])
-        return True
+    def _run_batch(self) -> None:
+        """Generation-stamped candidate-array realisation of the selection
+        rule: zero heap operations on the common path."""
+        counts = self.counts
+        dormant = self._dormant
+        while True:
+            an = self._an
+            best = self._apri[:an].max() if an else -np.inf
+            if self._rest is not None and best <= self._rest_bound:
+                # a deferred key could tie or beat the active best
+                self._reload_rest()
+                continue
+            if best <= 0.0:
+                break
+            idxs = np.nonzero(self._apri[:an] == best)[0]
+            kk = self._akeys[idxs]
+            stale = self._agen[idxs] != self._gen
+            if stale.any():
+                self.stats.n_stale_corrections += int(stale.sum())
+                sk = kk[stale]
+                cnts = counts.get_batch(sk)
+                pri = np.where(cnts >= 2, cnts * self._awt[idxs[stale]], 0.0)
+                if dormant:
+                    dorm = np.fromiter(
+                        (k in dormant for k in sk.tolist()), bool, sk.shape[0]
+                    )
+                    pri[dorm] = 0.0
+                self._apri[idxs[stale]] = pri
+                self._agen[idxs[stale]] = self._gen
+            winners = kk[self._apri[idxs] == best]
+            if winners.shape[0] == 0:
+                continue  # every entry at `best` was stale-high
+            key = int(winners.min())
+            if self._implement(key):
+                # eagerly re-score the winner's entries at its post-step
+                # count: its cached best is now stale, and correcting it
+                # here saves one full selection round per implementation.
+                # (positions are re-scanned: the step's appends may have
+                # compacted/reordered the active arrays)
+                sel = np.flatnonzero(self._akeys[: self._an] == key)
+                cnt = counts.get(key)
+                pri = cnt * self._awt[sel] if cnt >= 2 else 0.0
+                self._apri[sel] = pri
+                self._agen[sel] = self._gen
+            else:
+                dormant.add(key)
+                # zero the key's cached entries so the running max moves on
+                sel = self._akeys[: self._an] == key
+                self._apri[: self._an][sel] = 0.0
 
     def _implement(self, key: int) -> bool:
         i, j, s, sign = _unpack_key(key)
@@ -671,7 +907,8 @@ class CSE:
         # Delay-constraint filter, per column.  Replacing k occurrences
         # moves exactly k digits of row i and k of row j onto the new row
         # (depth u_depth), so the column's leaf-depth multiset after k
-        # acceptances depends only on k: simulate on the depth histogram.
+        # acceptances depends only on k: score the whole candidate batch
+        # k = 1..n in one histogram sweep (min_tree_depth_hist_batch).
         accepted: dict[int, np.ndarray] = {}
         total = 0
         for c, ps in occs.items():
@@ -684,52 +921,65 @@ class CSE:
             self._sync_meta()
             dep = self._meta_depth[store.rows[: store.n]]
             lv, cn = np.unique(dep, return_counts=True)
-            base = dict(zip(lv.tolist(), cn.tolist()))
+            extra = np.array([d_i_depth, d_j_depth, u_depth], dtype=np.int64)
+            levels = np.union1d(lv, extra)
+            base = np.zeros(levels.shape[0], dtype=np.int64)
+            base[np.searchsorted(levels, lv)] = cn
+            li = int(np.searchsorted(levels, d_i_depth))
+            lj = int(np.searchsorted(levels, d_j_depth))
+            lu = int(np.searchsorted(levels, u_depth))
             n_ps = ps.shape[0]
-            n_keep = 0
-            for n_seen in range(n_ps):
-                k = n_keep + 1
-                hist = dict(base)
-                hist[d_i_depth] = hist.get(d_i_depth, 0) - k
-                hist[d_j_depth] = hist.get(d_j_depth, 0) - k
-                hist[u_depth] = hist.get(u_depth, 0) + k
-                if min_tree_depth_hist(hist) <= budget:
-                    n_keep = k
-                else:
-                    # feasibility depends only on k, so every remaining
-                    # occurrence in this column is rejected too
-                    self.stats.n_rejected_by_depth += n_ps - n_seen
-                    break
+            ks = np.arange(1, n_ps + 1, dtype=np.int64)
+            hists = np.broadcast_to(base, (n_ps, levels.shape[0])).copy()
+            hists[:, li] -= ks
+            hists[:, lj] -= ks  # li == lj when i == j: both ops apply
+            hists[:, lu] += ks
+            feas = min_tree_depth_hist_batch(levels, hists) <= budget
+            n_keep = n_ps if bool(feas.all()) else int(feas.argmin())
+            if n_keep < n_ps:
+                # feasibility depends only on k, so every occurrence past
+                # the first infeasible acceptance is rejected too
+                self.stats.n_rejected_by_depth += n_ps - n_keep
             if n_keep:
                 accepted[c] = ps[:n_keep]
                 total += n_keep
         if total < 2:
-            return False  # dormant until counts change again
+            return False  # dormant until counts increase again
         u = self._impl_cache.get(key)
         if u is None:
             u = self.prog.add_op(i, j, max(0, -s), max(0, s), sign)
             self._impl_cache[key] = u
         self.stats.n_patterns_implemented += 1
-        rem_parts: list[np.ndarray] = []
-        add_parts: list[np.ndarray] = []
+        # Replace occurrences column by column, collecting the removed and
+        # added digit sets plus a view of each column's post-removal store;
+        # every digit pair the step touches is then built block-structured
+        # and counted in ONE _canon_pack + _apply_deltas call (_step_pairs).
+        rem_sets: list[tuple] = []
+        add_sets: list[tuple] = []
+        snaps: list[tuple] = []
         for c, ps in accepted.items():
             store = self.cols[c]
             k = ps.shape[0]
-            r_rows = np.concatenate(
-                [np.full(k, i, dtype=np.int64), np.full(k, j, dtype=np.int64)]
-            )
+            r_rows = np.empty(2 * k, dtype=np.int64)
+            r_rows[:k] = i
+            r_rows[k:] = j
             r_poss = np.concatenate([ps, ps + s])
             ds = [
                 store.remove(r, p)
                 for r, p in zip(r_rows.tolist(), r_poss.tolist())
             ]
             r_digs = np.array(ds, dtype=np.int64)
-            rem_parts.append(self._pairs_against(store, r_rows, r_poss, r_digs))
+            # the live slices below stay valid without copying: from here
+            # on this store only appends (slots < n_c are never disturbed,
+            # and a capacity grow leaves the viewed buffer intact)
+            n_c = store.n
+            snaps.append((store.rows[:n_c], store.poss[:n_c], store.digs[:n_c]))
+            rem_sets.append((r_rows, r_poss, r_digs))
             a_poss = ps + min(0, s)
             a_digs = r_digs[:k]
-            a_rows = np.full(k, u, dtype=np.int64)
-            add_keys = self._pairs_against(store, a_rows, a_poss, a_digs)
-            add_parts.append(add_keys)
+            # read-only broadcast view: gathers/repeats in _step_pairs copy
+            a_rows = np.broadcast_to(np.int64(u), (k,))
+            add_sets.append((a_rows, a_poss, a_digs))
             cols_u = self.row_cols.get(u)
             if cols_u is None:
                 self.row_cols[u] = {c}
@@ -738,7 +988,15 @@ class CSE:
             for p, d in zip(a_poss.tolist(), a_digs.tolist()):
                 store.add(u, p, d)
             self.stats.n_occurrences_replaced += k
-        self._apply_deltas(rem_parts, add_parts)
+        res = _step_pairs(
+            rem_sets + add_sets,
+            snaps + snaps,
+            [-1] * len(rem_sets) + [1] * len(add_sets),
+        )
+        if res is not None:
+            a, b, signs = res
+            packed = _canon_pack(a[0], a[1], a[2], b[0], b[1], b[2])
+            self._apply_deltas(packed, signs)
         return True
 
     # ------------------------------------------------------------------

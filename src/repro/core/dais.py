@@ -83,7 +83,8 @@ class DAISProgram:
         qa, qb = ra.qint.shift(sh_a), rb.qint.shift(sh_b)
         qint = qint_add_shifted(qa, qb, 0, sign)
         depth = max(ra.depth, rb.depth) + 1
-        cost = adder_cost(ra.qint, rb.qint, sh_a, sh_b, sign)
+        # operands are pre-shifted, so the cost model sees zero shifts
+        cost = adder_cost(qa, qb, 0, 0, sign)
         self.rows.append(Row(KIND_ADD, a, b, sh_a, sh_b, sign, qint, depth, cost))
         return len(self.rows) - 1
 
@@ -157,14 +158,22 @@ class DAISProgram:
                     stack.append(r.b)
         remap: dict[int, int] = {}
         new = DAISProgram()
+        rows = new.rows
         for i, r in enumerate(self.rows):
             if r.kind == KIND_INPUT:
-                remap[i] = new.add_input(r.qint, r.depth)
+                remap[i] = len(rows)
+                rows.append(Row(KIND_INPUT, qint=r.qint, depth=r.depth))
+                new.n_inputs += 1
             elif live[i]:
-                if r.kind == KIND_ADD:
-                    remap[i] = new.add_op(remap[r.a], remap[r.b], r.sh_a, r.sh_b, r.sign)
-                else:
-                    remap[i] = new.add_neg(remap[r.a])
+                # qint/depth/cost are invariant under pruning: copy the row
+                # with remapped operands instead of recomputing through
+                # add_op (which would redo the exact interval arithmetic)
+                remap[i] = len(rows)
+                b = remap[r.b] if r.kind == KIND_ADD else -1
+                rows.append(
+                    Row(r.kind, remap[r.a], b, r.sh_a, r.sh_b, r.sign,
+                        r.qint, r.depth, r.cost)
+                )
         new.outputs = [
             None if t is None else Term(t.sign, remap[t.row], t.shift) for t in self.outputs
         ]

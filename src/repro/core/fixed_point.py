@@ -81,7 +81,6 @@ class QInterval:
         """Total bitwidth W needed to represent every point on the grid."""
         if self.is_zero:
             return 0
-        span = self.hi - self.lo
         # magnitude bits to cover max(|lo|, hi) given two's complement
         if self.lo < 0:
             mag = max(self.hi, -self.lo - 1)
@@ -103,7 +102,7 @@ class QInterval:
     # ------------------------------------------------------------------
     def shift(self, s: int) -> "QInterval":
         """Multiply by 2^s (free in hardware: bit reinterpretation)."""
-        if self.is_zero:
+        if s == 0 or self.is_zero:
             return self
         return QInterval(self.lo, self.hi, self.exp + s)
 

@@ -23,8 +23,8 @@ import numpy as np
 from .cache import SolutionCache, solve_key
 from .cost import ceil_log2, min_tree_depth
 from .csd import csd_nnz
-from .cse import CSE, CSEStats
-from .dais import DAISProgram, Term
+from .cse import CSE
+from .dais import DAISProgram
 from .fixed_point import QInterval
 from .graph_decompose import decompose
 
@@ -109,6 +109,7 @@ def solve_cmvm(
     weighted: bool = True,
     assembly_dedup: bool = True,
     depth_weight: float = 0.0,
+    engine: str = "batch",
     program: Optional[DAISProgram] = None,
     input_rows: Optional[Sequence[int]] = None,
     cache: Optional[SolutionCache] = None,
@@ -125,6 +126,9 @@ def solve_cmvm(
         (-1 = unconstrained, as in the paper's tables).
     decompose_stage : enable stage 1 (disabled automatically for dc=0
         where the decomposition is provably trivial).
+    engine : CSE frequency engine, ``"batch"`` (vectorized batch-scored
+        candidate array, the fast default) or ``"heap"`` (exact lazy
+        max-heap reference).  Both produce identical DAIS programs.
     program / input_rows : optionally extend an existing program whose
         rows ``input_rows`` are this CMVM's inputs (NN layer chaining).
     cache : optional content-addressed :class:`SolutionCache`; only used
@@ -151,6 +155,7 @@ def solve_cmvm(
                 weighted=weighted,
                 assembly_dedup=assembly_dedup,
                 depth_weight=depth_weight,
+                engine=engine,
                 kind="da",
             )
             hit = cache.get(key)
@@ -167,7 +172,7 @@ def solve_cmvm(
     budgets, _ = _budgets(m_int, in_depths, dc)
 
     use_decomp = decompose_stage and dc != 0 and d_out > 1
-    stats: dict = {}
+    stats: dict = {"engine": engine}
     if use_decomp:
         dec = decompose(m_int, dc)
         stats["decomposition_trivial"] = dec.is_trivial
@@ -196,7 +201,10 @@ def solve_cmvm(
             {input_rows[i]: int(dec.m1[i, e]) for i in range(d_in) if dec.m1[i, e] != 0}
             for e in range(k)
         ]
-        cse1 = CSE(program, cols1, m1_budgets, weighted, assembly_dedup, depth_weight)
+        cse1 = CSE(
+            program, cols1, m1_budgets, weighted, assembly_dedup, depth_weight,
+            engine=engine,
+        )
         z_terms = cse1.run()
         stats["stage1_cse"] = cse1.stats
 
@@ -211,7 +219,10 @@ def solve_cmvm(
                 t = z_terms[e]
                 col[t.row] = col.get(t.row, 0) + c * t.sign * (1 << t.shift)
             cols2.append(col)
-        cse2 = CSE(program, cols2, budgets, weighted, assembly_dedup, depth_weight)
+        cse2 = CSE(
+            program, cols2, budgets, weighted, assembly_dedup, depth_weight,
+            engine=engine,
+        )
         outputs = cse2.run()
         stats["stage2_cse"] = cse2.stats
     else:
@@ -219,7 +230,10 @@ def solve_cmvm(
             {input_rows[i]: int(m_int[i, j]) for i in range(d_in) if m_int[i, j] != 0}
             for j in range(d_out)
         ]
-        cse = CSE(program, cols, budgets, weighted, assembly_dedup, depth_weight)
+        cse = CSE(
+            program, cols, budgets, weighted, assembly_dedup, depth_weight,
+            engine=engine,
+        )
         outputs = cse.run()
         stats["stage2_cse"] = cse.stats
 
@@ -232,9 +246,13 @@ def solve_cmvm(
     return sol
 
 
-def default_solve_key(m_int, qint_in, depth_in, dc: int, kind: str = "da") -> str:
+def default_solve_key(
+    m_int, qint_in, depth_in, dc: int, kind: str = "da",
+    engine: Optional[str] = None,
+) -> str:
     """Cache key for a ``solve_cmvm`` call that leaves every solver option
-    at its default (as ``compile_model``'s solve phase issues them).
+    at its default (as ``compile_model``'s solve phase issues them), with
+    the CSE ``engine`` optionally overridden.
 
     The option values are read off ``solve_cmvm``'s signature so the key
     can never drift from the defaults actually used to solve.
@@ -244,21 +262,29 @@ def default_solve_key(m_int, qint_in, depth_in, dc: int, kind: str = "da") -> st
     sig = inspect.signature(solve_cmvm)
     opts = {
         name: sig.parameters[name].default
-        for name in ("decompose_stage", "weighted", "assembly_dedup", "depth_weight")
+        for name in (
+            "decompose_stage", "weighted", "assembly_dedup", "depth_weight",
+            "engine",
+        )
     }
+    if engine is not None:
+        opts["engine"] = engine
     return solve_key(m_int, qint_in, depth_in, dc=dc, kind=kind, **opts)
 
 
 def solve_task(payload) -> "Solution":
-    """One CMVM solve from a picklable payload (w_int, qin, strategy, dc).
+    """One CMVM solve from a picklable payload
+    ``(w_int, qin, strategy, dc[, engine])`` (4-tuples solve with the
+    default engine).
 
     Lives in this jax-free module so process-pool workers (see
     ``repro.nn.compiler``) import only numpy-land code.
     """
-    w_int, qin, strategy, dc = payload
+    w_int, qin, strategy, dc = payload[:4]
+    engine = payload[4] if len(payload) > 4 else "batch"
     if strategy == "latency":
         return naive_adder_tree(w_int, qint_in=qin)
-    return solve_cmvm(w_int, qint_in=qin, dc=dc)
+    return solve_cmvm(w_int, qint_in=qin, dc=dc, engine=engine)
 
 
 def naive_adder_tree(

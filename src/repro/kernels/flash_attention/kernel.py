@@ -58,8 +58,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, off_ref, o_ref, *, scale, causal, block_k
     acc0 = jnp.zeros((bq, d), jnp.float32)
     m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((bq, 1), jnp.float32)
-    acc, _, l = jax.lax.fori_loop(0, nk_eff, body, (acc0, m0, l0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    acc, _, lsum = jax.lax.fori_loop(0, nk_eff, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(lsum, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(

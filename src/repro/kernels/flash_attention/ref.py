@@ -14,7 +14,6 @@ GQA is computed with a grouped einsum (no K/V repeat materialisation).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 _DENSE_MAX_ELEMS = 1 << 24  # logits entries per (b,h) slice before chunking

@@ -24,6 +24,7 @@ def selective_scan_ref(
         h = decay * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
         return h, jnp.einsum("bdn,bn->bd", h, c_t)
 
-    tm = lambda u: u.swapaxes(0, 1)
+    def tm(u):
+        return u.swapaxes(0, 1)
     h, ys = jax.lax.scan(step, h0, (tm(dt), tm(bmat), tm(x), tm(cmat)))
     return ys.swapaxes(0, 1), h

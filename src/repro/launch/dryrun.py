@@ -137,7 +137,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = Tru
             )
             lowered = jitted.lower(abs_params, abs_opt, b_specs, step_spec)
         elif shape.kind == "prefill":
-            fn = lambda p, b: prefill(cfg, p, b, shape.seq_len)
+            def fn(p, b):
+                return prefill(cfg, p, b, shape.seq_len)
             abs_cache = jax.eval_shape(
                 lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
             )
@@ -167,7 +168,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = Tru
             logits_sh = rules.sharding(
                 ("batch", "model"), (shape.global_batch, cfg.padded_vocab)
             )
-            serve_step = lambda p, t, c: decode_step(cfg, p, t, c)
+            def serve_step(p, t, c):
+                return decode_step(cfg, p, t, c)
             jitted = jax.jit(
                 serve_step,
                 in_shardings=(p_sh, b_sh["tokens"], c_sh),

@@ -192,7 +192,6 @@ def _conv_flops(instr: Instr, comp: Computation) -> float:
     # operand/result shapes: flops = 2 * out_elems * prod(kernel)/out_feat
     if len(instr.operands) < 2:
         return 0.0
-    out_b = _first_shapes_bytes(instr.result_text)
     ker = comp.table.get(instr.operands[1], "")
     ker_shapes = _SHAPE_RE.findall(ker)
     if not ker_shapes:
@@ -279,7 +278,6 @@ def _walk(comps, name: str, mult: float, costs: Costs, n_devices: int, flops_onl
             m = _TRIP_RE.search(ins.line)
             if m:
                 trips = int(m.group(1))
-            called = _CALLED_RE.findall(ins.line)
             body = None
             bm = re.search(r"body=%?([\w.\-]+)", ins.line)
             if bm:

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import SHAPES, applicable_shapes
+from ..configs import applicable_shapes
 from ..configs.base import ArchConfig, ShapeConfig
 from ..distributed import MeshRules
 from ..models import init_cache

@@ -63,12 +63,14 @@ def main() -> None:
         if rules is not None:
             p_sh = param_shardings(cfg, rules)
             jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
-            init_fn = lambda: jax.jit(
-                lambda k: init_params(cfg, k), out_shardings=p_sh
-            )(jax.random.PRNGKey(0))
+            def init_fn():
+                return jax.jit(
+                    lambda k: init_params(cfg, k), out_shardings=p_sh
+                )(jax.random.PRNGKey(0))
         else:
             jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
-            init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+            def init_fn():
+                return init_params(cfg, jax.random.PRNGKey(0))
 
         trainer = Trainer.resume_or_init(cfg, run_cfg, pipe, init_fn, jit_step, opt_init)
         print(

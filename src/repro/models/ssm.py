@@ -111,7 +111,8 @@ def mamba_block(
             y_t = jnp.einsum("bds,bs->bd", h, c_t)
             return h, y_t
 
-        tm = lambda u: u.swapaxes(0, 1)  # [B,S,...] -> [S,B,...]
+        def tm(u):
+            return u.swapaxes(0, 1)  # [B,S,...] -> [S,B,...]
         new_h, ys = jax.lax.scan(step, h0, (tm(dt), tm(bmat), tm(xc), tm(cmat)))
         y = ys.swapaxes(0, 1)
     else:

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax
@@ -271,7 +270,8 @@ def _apply_stack(
         aux = aux0
         outs = []
         for t in range(n_periods):
-            sl = lambda a: a[t]
+            def sl(a, t=t):
+                return a[t]
             xs = (
                 jax.tree.map(sl, blocks),
                 None if caches is None else jax.tree.map(sl, caches),

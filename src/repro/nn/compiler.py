@@ -36,8 +36,6 @@ from ..core.pipelining import pipeline
 from ..core.solver import (
     Solution,
     default_solve_key,
-    naive_adder_tree,
-    solve_cmvm,
     solve_task,
 )
 from ..kernels.adder_graph import adder_graph_apply, compile_tables
@@ -225,34 +223,39 @@ class _SolveSlot:
     slot alive for the design's lifetime, and the weight matrices /
     solved programs would otherwise be pinned along with it)."""
 
-    __slots__ = ("w_int", "qin", "strategy", "dc", "key", "solution", "tables")
+    __slots__ = ("w_int", "qin", "strategy", "dc", "engine", "key", "solution", "tables")
 
-    def __init__(self, w_int, qin, strategy, dc):
+    def __init__(self, w_int, qin, strategy, dc, engine):
         self.w_int = w_int
         self.qin = qin
         self.strategy = strategy
         self.dc = dc
+        self.engine = engine
         self.key = None
         self.solution: Optional[Solution] = None
         self.tables = None
 
 
 class _Ctx:
-    def __init__(self, dc, strategy, mdps, use_pallas, design):
+    def __init__(self, dc, strategy, mdps, use_pallas, design, engine):
         self.dc = dc
         self.strategy = strategy
         self.mdps = mdps
         self.use_pallas = use_pallas
         self.design = design
+        self.engine = engine
         self.slots: list[_SolveSlot] = []
         self.slot_map: dict = {}
         self.pending_reports: list = []
 
     def request(self, w_int: np.ndarray, qin: list[QInterval]) -> _SolveSlot:
-        dedup = (self.strategy, self.dc, w_int.shape, w_int.tobytes(), tuple(qin))
+        dedup = (
+            self.strategy, self.dc, self.engine,
+            w_int.shape, w_int.tobytes(), tuple(qin),
+        )
         slot = self.slot_map.get(dedup)
         if slot is None:
-            slot = _SolveSlot(w_int, qin, self.strategy, self.dc)
+            slot = _SolveSlot(w_int, qin, self.strategy, self.dc, self.engine)
             self.slot_map[dedup] = slot
             self.slots.append(slot)
         return slot
@@ -264,7 +267,9 @@ def _slot_key(slot: _SolveSlot) -> str:
     depth_in = [0] * len(slot.qin)
     if slot.strategy == "latency":
         return solve_key(slot.w_int, slot.qin, depth_in, kind="latency")
-    return default_solve_key(slot.w_int, slot.qin, depth_in, dc=slot.dc)
+    return default_solve_key(
+        slot.w_int, slot.qin, depth_in, dc=slot.dc, engine=slot.engine
+    )
 
 
 def _solve_slots(
@@ -286,7 +291,7 @@ def _solve_slots(
         misses.append(slot)
     n_pool = 0
     if misses:
-        payloads = [(s.w_int, s.qin, s.strategy, s.dc) for s in misses]
+        payloads = [(s.w_int, s.qin, s.strategy, s.dc, s.engine) for s in misses]
         results: Optional[list[Solution]] = None
         jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
         if jobs_eff != 1 and len(misses) > 1:
@@ -331,22 +336,26 @@ def compile_model(
     use_pallas: bool = False,
     jobs: Optional[int] = None,
     cache: Optional[SolutionCache] = None,
+    engine: str = "batch",
 ) -> CompiledDesign:
     """Compile a quantized Sequential into a bit-exact integer design.
 
     ``jobs``: CMVM solver parallelism — None uses ``os.cpu_count()``,
     1 forces in-process serial solves; any value produces bit-identical
     designs.  ``cache``: optional :class:`SolutionCache` so repeated
-    compiles skip solved CMVMs entirely.
+    compiles skip solved CMVMs entirely.  ``engine``: CSE frequency
+    engine for the "da" strategy ("batch" default, "heap" reference);
+    both produce bit-identical designs (see repro.core.cse).
     """
     design = CompiledDesign(in_quant=in_quant)
-    ctx = _Ctx(dc, strategy, max_delay_per_stage, use_pallas, design)
+    ctx = _Ctx(dc, strategy, max_delay_per_stage, use_pallas, design, engine)
     shape = tuple(in_shape)
     qints = [in_quant.qint] * int(np.prod(shape))
     # plan
     steps, shape, qints = _compile_seq(model, params, shape, qints, ctx)
     # solve
     design.solver_stats = _solve_slots(ctx.slots, jobs, cache)
+    design.solver_stats["engine"] = engine
     # stitch
     for slot, name, shape_str, n_bias, bias_bits in ctx.pending_reports:
         sol = slot.solution

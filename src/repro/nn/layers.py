@@ -10,7 +10,7 @@ within 1 ulp of the hardware semantics.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Union
 
 import jax

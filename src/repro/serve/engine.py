@@ -9,7 +9,7 @@ preallocated to ``max_seq`` and sharded per the mesh rules.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -96,7 +96,7 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
         out = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
     else:
         out = [
-            jax.device_put(h.astype(l.dtype) if hasattr(l, "dtype") else h)
-            for h, l in zip(host, leaves)
+            jax.device_put(h.astype(lf.dtype) if hasattr(lf, "dtype") else h)
+            for h, lf in zip(host, leaves)
         ]
     return treedef.unflatten(out)

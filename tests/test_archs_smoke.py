@@ -10,7 +10,7 @@ import pytest
 
 from repro import configs
 from repro.configs.base import RunConfig
-from repro.models import decode_step, forward, init_params, loss_fn
+from repro.models import decode_step, forward, init_params
 from repro.models.transformer import prefill
 from repro.train.train_lib import make_train_step
 

@@ -2,7 +2,6 @@
 DAISProgram array round-trip, and disk persistence."""
 
 import numpy as np
-import pytest
 
 from repro.core import (
     DAISProgram,

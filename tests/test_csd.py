@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import csd_nnz, csd_span, from_csd, to_csd
+from repro.core import csd_nnz, from_csd, to_csd
 
 
 @given(st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=64))

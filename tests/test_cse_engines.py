@@ -1,0 +1,112 @@
+"""Engine equivalence for the batch-scored CSE rewrite (hypothesis-free).
+
+The ``engine="batch"`` candidate-array engine and the ``engine="heap"``
+lazy max-heap engine realise the same selection rule (max priority,
+smallest-key tie-break, dormancy on failed implementation), so they must
+produce *identical* DAIS programs — not merely equal adder counts.
+These tests pin that contract, the batch delay scorer, and the
+compile_model fast path under the new default engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import min_tree_depth_hist, solve_cmvm
+from repro.core.cost import min_tree_depth_hist_batch
+
+
+def _mat(m, seed, bw=8):
+    rng = np.random.default_rng(seed)
+    return rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
+
+
+CASES = [
+    (8, 3, -1),
+    (10, 5, 0),
+    (12, 7, 1),
+    (16, 42, -1),
+    (16, 42, 2),
+    (16, 44, 0),
+]
+
+
+def _program_arrays(sol):
+    return sol.program.to_arrays()
+
+
+@pytest.mark.parametrize("m,seed,dc", CASES)
+def test_engines_produce_identical_programs(m, seed, dc):
+    mat = _mat(m, seed)
+    batch = solve_cmvm(mat, dc=dc, engine="batch")
+    heap = solve_cmvm(mat, dc=dc, engine="heap")
+    assert batch.verify() and heap.verify()
+    a, b = _program_arrays(batch), _program_arrays(heap)
+    for key in ("rows", "outputs", "n_inputs"):
+        np.testing.assert_array_equal(a[key], b[key], err_msg=f"{key} diverged")
+    assert batch.n_adders == heap.n_adders
+    assert batch.cost_bits == heap.cost_bits
+    assert batch.stats["engine"] == "batch"
+    assert heap.stats["engine"] == "heap"
+
+
+def test_engines_identical_on_rectangular_and_sparse():
+    rng = np.random.default_rng(11)
+    mat = rng.integers(-(2**7), 2**7, size=(24, 6))
+    mat[rng.random(mat.shape) < 0.5] = 0
+    for dc in (-1, 2):
+        a = solve_cmvm(mat, dc=dc, engine="batch")
+        b = solve_cmvm(mat, dc=dc, engine="heap")
+        assert a.verify()
+        np.testing.assert_array_equal(
+            _program_arrays(a)["rows"], _program_arrays(b)["rows"]
+        )
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="engine"):
+        solve_cmvm(_mat(4, 0), engine="quantum")
+
+
+def test_batch_depth_scorer_matches_scalar():
+    """min_tree_depth_hist_batch == the scalar simulation on shared-level
+    histograms, including zero-count levels (which the scalar filters)."""
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        n_l = int(rng.integers(1, 8))
+        levels = np.sort(rng.choice(20, size=n_l, replace=False))
+        counts = rng.integers(0, 10, size=(int(rng.integers(1, 5)), n_l))
+        got = min_tree_depth_hist_batch(levels, counts)
+        for bi in range(counts.shape[0]):
+            hist = {int(d): int(c) for d, c in zip(levels, counts[bi])}
+            assert got[bi] == min_tree_depth_hist(hist), (levels, counts[bi])
+
+
+def test_compile_model_parallel_bit_identical_default_engine():
+    """jobs=N must stay bit-identical to serial under the default (batch)
+    engine, and engine="heap" must produce the same integers."""
+    jax = pytest.importorskip("jax")
+    from repro.nn import QuantConfig, compile_model, init_params
+    from repro.nn.layers import QDense, ReLU, Sequential
+
+    model = Sequential(
+        (
+            QDense(12, QuantConfig(6, 2)),
+            ReLU(QuantConfig(7, 4, signed=False)),
+            QDense(6, QuantConfig(6, 2)),
+        )
+    )
+    in_shape = (10,)
+    in_quant = QuantConfig(8, 3, signed=True)
+    params, _ = init_params(jax.random.PRNGKey(2), model, in_shape)
+    serial = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
+    par = compile_model(model, params, in_shape, in_quant, dc=2, jobs=2)
+    heap = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, engine="heap")
+    assert serial.solver_stats["engine"] == "batch"
+    assert heap.solver_stats["engine"] == "heap"
+    rng = np.random.default_rng(3)
+    q = in_quant.qint
+    xi = np.asarray(rng.integers(q.lo, q.hi + 1, size=(16, *in_shape)), np.int32)
+    y_serial = np.asarray(serial.forward_int(xi))
+    np.testing.assert_array_equal(y_serial, np.asarray(par.forward_int(xi)))
+    np.testing.assert_array_equal(y_serial, np.asarray(heap.forward_int(xi)))
+    assert [r.adders for r in serial.reports] == [r.adders for r in heap.reports]

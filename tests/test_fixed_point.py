@@ -1,6 +1,5 @@
 """Quantized-interval arithmetic: exactness of range propagation."""
 
-import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

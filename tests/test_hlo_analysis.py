@@ -21,7 +21,10 @@ out = {}
 # 1) scan with known trip count: flops must be trips * body
 W = jax.ShapeDtypeStruct((8, 512, 512), jnp.float32)
 X = jax.ShapeDtypeStruct((128, 512), jnp.float32)
-f = lambda w, x: jax.lax.scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w)[0]
+def f(w, x):
+    return jax.lax.scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w)[0]
+
+
 c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "data", "model")),
                              NamedSharding(mesh, P("data", None)))).lower(W, X).compile()
 r = analyze(c.as_text(), 8)

@@ -8,7 +8,6 @@ import numpy as np
 import pytest
 
 from repro.nn import (
-    QuantConfig,
     apply_model,
     compile_model,
     init_params,

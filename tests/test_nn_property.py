@@ -5,7 +5,6 @@ the paper's 'full numerical precision' claim."""
 
 import jax
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -71,7 +70,6 @@ def test_random_conv_bit_exact(seed, filters):
 
 def test_compiled_design_da_never_more_adders_than_latency():
     """DA strategy should never use more adders across random models."""
-    rng = np.random.default_rng(0)
     for seed in range(3):
         model = (QDense(16, QuantConfig(6, 2)), ReLU(QuantConfig(8, 4, signed=False)),
                  QDense(8, QuantConfig(6, 2)))

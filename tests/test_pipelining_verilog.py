@@ -1,7 +1,6 @@
 """Pipelining + Verilog emission: structural invariants (property-based)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,6 +1,5 @@
 """W8A8 Pallas kernel vs jnp oracle: shape/dtype sweep + exactness."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -137,7 +137,8 @@ def _trainer_setup(tmp_path, ckpt_every=2):
     )
     train_step, opt_init = make_train_step(cfg, run_cfg)
     jit_step = jax.jit(train_step, donate_argnums=(0, 1))
-    init_fn = lambda: init_params(cfg, jax.random.PRNGKey(0))
+    def init_fn():
+        return init_params(cfg, jax.random.PRNGKey(0))
     return cfg, run_cfg, pipe, init_fn, jit_step, opt_init
 
 

@@ -262,7 +262,6 @@ def test_depth_weight_exact_and_helps_at_dc0():
     """Beyond-paper depth-aware CSE weighting: still bit-exact, and not
     meaningfully worse on average at dc=0 (where its hypothesis applies;
     1% slack for greedy tie-break noise, as in the sibling tests)."""
-    rng = np.random.default_rng(31)
     tot_dw = tot_base = 0
     for s in range(3):
         m = np.random.default_rng(s).integers(2**7 + 1, 2**8, size=(12, 12))
