@@ -5,6 +5,7 @@
     tables5_12_networks     Tables 5-12 (network-level DA vs latency)
     fig7_runtime_scaling    Fig. 7 (solver runtime scaling)
     solver_smoke            solver fast-path wall-clock budget check
+    serve_load              artifact round-trip + microbatched serve load
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
@@ -38,6 +39,7 @@ def main() -> None:
         "networks": "tables5_12_networks",
         "fig7": "fig7_runtime_scaling",
         "smoke": "solver_smoke",
+        "serve": "serve_load",
         "lm": "lm_step_bench",
     }
     failed = False
@@ -46,8 +48,12 @@ def main() -> None:
             continue
         mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        if name == "smoke":
-            result = mod.main(json_path=json_path)
+        if name in ("smoke", "serve"):
+            # gated benches: JSON artifact + exit-1 on budget/exactness
+            # failure.  --json targets the explicitly selected bench
+            # (or smoke, the historical default, when running all).
+            jp = json_path if (only == name or (name == "smoke" and only is None)) else None
+            result = mod.main(json_path=jp)
             failed = failed or not mod.passed(result)
         else:
             mod.main()

@@ -1,0 +1,265 @@
+"""Serve-load bench: compile-once / serve-many under sustained traffic.
+
+End-to-end exercise of the deployable runtime (repro.runtime): compile a
+32x32 8-bit CMVM model, round-trip it through the ``save_design`` /
+``load_design`` artifact (verifying bit-exactness and that the cold
+start performs **zero** CMVM solves), register the loaded design in the
+microbatched :class:`ServeEngine`, and drive it with a load generator:
+
+  closed loop   N workers, each submit -> wait -> repeat (throughput =
+                N / latency; measures sustainable service rate);
+  open loop     Poisson arrivals at ``target_rps`` regardless of
+                completions (measures latency under offered load,
+                including queueing delay).
+
+Prints the usual ``name,us_per_call,derived`` CSV and writes a
+``BENCH_serve.json``-compatible report (``--json PATH``) with achieved
+throughput, p50/p95/p99 latency, batch occupancy, and artifact timings.
+Exit code 1 if the engine cannot sustain ``min_rps`` or the artifact
+round-trip is not bit-exact.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+
+def build_model(m: int = 32, w_bits: int = 8):
+    """One m x m dense CMVM with 8-bit weights (the acceptance model)."""
+    from repro.nn import QDense, QuantConfig
+
+    wq = QuantConfig(w_bits, 2, signed=True)
+    model = (QDense(m, wq),)
+    in_quant = QuantConfig(8, 4, signed=True)
+    return model, (m,), in_quant
+
+
+def _compile_and_roundtrip(m, w_bits, tmpdir, seed=0):
+    import jax
+
+    from repro.nn import compile_model, init_params
+    from repro.runtime import load_design, save_design
+
+    model, in_shape, in_quant = build_model(m, w_bits)
+    params, _ = init_params(jax.random.PRNGKey(seed), model, in_shape)
+    t0 = time.perf_counter()
+    design = compile_model(model, params, in_shape, in_quant, dc=2)
+    compile_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    save_design(design, f"{tmpdir}/design")
+    save_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    loaded = load_design(f"{tmpdir}/design")
+    load_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(seed)
+    q = in_quant.qint
+    x = rng.integers(q.lo, q.hi + 1, size=(64, *in_shape)).astype(np.int32)
+    bit_exact = bool(
+        np.array_equal(np.asarray(design.forward_int(x)), np.asarray(loaded.forward_int(x)))
+    )
+    artifact = {
+        "save_s": save_s,
+        "load_s": load_s,
+        "bit_exact": bit_exact,
+        "n_solves_on_load": loaded.solver_stats["n_solves"],
+        "digests_match": [
+            a.digest == b.digest for a, b in zip(design.tables, loaded.tables)
+        ],
+    }
+    return loaded, in_shape, in_quant, compile_s, artifact
+
+
+def _closed_loop(engine, name, samples, duration_s, workers, window):
+    """Fixed-concurrency load: ``workers`` generator threads, each with
+    ``window`` requests in flight (total concurrency workers*window).
+
+    Pipelining matters: with a window, ``result()`` usually pops an
+    already-completed future, so a generator thread is only descheduled
+    when the whole window is pending — per-request thread wakeups (the
+    throughput ceiling of a submit->wait->repeat loop) disappear.
+    """
+    stop_t = time.perf_counter() + duration_s
+    counts = [0] * workers
+
+    def work(i):
+        from collections import deque
+
+        dq: deque = deque()
+        n = 0
+        k = len(samples)
+        while time.perf_counter() < stop_t:
+            while len(dq) < window:
+                dq.append(engine.submit(name, samples[(i + n) % k]))
+                n += 1
+            dq.popleft().result(30)
+        for f in dq:
+            f.result(30)
+        counts[i] = n
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    return sum(counts), elapsed
+
+
+def _open_loop(engine, name, samples, duration_s, target_rps, seed=0):
+    rng = np.random.default_rng(seed)
+    k = len(samples)
+    futures = []
+    t0 = time.perf_counter()
+    t_next = t0
+    n = 0
+    while True:
+        now = time.perf_counter()
+        if now - t0 >= duration_s:
+            break
+        if now < t_next:
+            time.sleep(min(t_next - now, 0.001))
+            continue
+        futures.append(engine.submit(name, samples[n % k]))
+        n += 1
+        t_next += rng.exponential(1.0 / target_rps)
+    for f in futures:
+        f.result(30)
+    elapsed = time.perf_counter() - t0
+    return n, elapsed
+
+
+def run(
+    mode: str = "closed",
+    m: int = 32,
+    w_bits: int = 8,
+    duration_s: float = 2.0,
+    workers: int = 4,
+    window: int = 32,
+    target_rps: float = 20_000.0,
+    max_batch: int = 256,
+    max_wait_us: float = 200.0,
+    min_rps: float = 10_000.0,
+    seed: int = 0,
+) -> dict:
+    from repro.runtime import ServeEngine
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        loaded, in_shape, in_quant, compile_s, artifact = _compile_and_roundtrip(
+            m, w_bits, tmpdir, seed
+        )
+
+    rng = np.random.default_rng(seed + 1)
+    q = in_quant.qint
+    samples = [
+        np.asarray(rng.integers(q.lo, q.hi + 1, size=in_shape), np.int32)
+        for _ in range(256)
+    ]
+
+    engine = ServeEngine(max_batch=max_batch, max_wait_us=max_wait_us)
+    engine.register("bench", loaded)
+    warmup_s = engine.warmup("bench")
+    try:
+        if mode == "closed":
+            n_done, elapsed = _closed_loop(
+                engine, "bench", samples, duration_s, workers, window
+            )
+        elif mode == "open":
+            n_done, elapsed = _open_loop(
+                engine, "bench", samples, duration_s, target_rps, seed
+            )
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        stats = engine.stats("bench")
+    finally:
+        engine.shutdown()
+
+    achieved = n_done / elapsed if elapsed > 0 else 0.0
+    return {
+        "bench": "serve_load",
+        "mode": mode,
+        "m": m,
+        "w_bits": w_bits,
+        "duration_s": duration_s,
+        "workers": workers if mode == "closed" else None,
+        "window": window if mode == "closed" else None,
+        "concurrency": workers * window if mode == "closed" else None,
+        "target_rps": target_rps if mode == "open" else None,
+        "n_requests": n_done,
+        "achieved_rps": achieved,
+        "min_rps": min_rps,
+        "sustained": achieved >= min_rps,
+        "p50_ms": stats["p50_ms"],
+        "p95_ms": stats["p95_ms"],
+        "p99_ms": stats["p99_ms"],
+        "mean_ms": stats["mean_ms"],
+        "n_batches": stats["n_batches"],
+        "mean_batch_occupancy": stats["mean_batch_occupancy"],
+        "n_rejected": stats["n_rejected"],
+        "compile_s": compile_s,
+        "engine_warmup_s": warmup_s,
+        "artifact": artifact,
+    }
+
+
+def passed(r: dict) -> bool:
+    a = r["artifact"]
+    return bool(
+        r["sustained"]
+        and a["bit_exact"]
+        and a["n_solves_on_load"] == 0
+        and all(a["digests_match"])
+    )
+
+
+def main(csv: bool = True, json_path=None, **kw) -> dict:
+    r = run(**kw)
+    if csv:
+        print("name,us_per_call,derived")
+        print(
+            f"serve_load_{r['mode']}_m{r['m']},{1e6 / max(r['achieved_rps'], 1e-9):.1f},"
+            f"rps={r['achieved_rps']:.0f};p50_ms={r['p50_ms']:.3f};"
+            f"p99_ms={r['p99_ms']:.3f};batches={r['n_batches']};"
+            f"occupancy={r['mean_batch_occupancy']:.2f};"
+            f"artifact_bit_exact={int(r['artifact']['bit_exact'])};"
+            f"load_solves={r['artifact']['n_solves_on_load']};"
+            f"cold_start_ms={r['artifact']['load_s'] * 1e3:.1f};"
+            f"sustained={int(r['sustained'])}"
+        )
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return r
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    kw: dict = {}
+    json_path = None
+    if "--json" in args:
+        k = args.index("--json")
+        json_path = args[k + 1]
+        del args[k : k + 2]
+    if "--mode" in args:
+        k = args.index("--mode")
+        kw["mode"] = args[k + 1]
+        del args[k : k + 2]
+    if "--min-rps" in args:
+        k = args.index("--min-rps")
+        kw["min_rps"] = float(args[k + 1])
+        del args[k : k + 2]
+    if "--duration" in args:
+        k = args.index("--duration")
+        kw["duration_s"] = float(args[k + 1])
+        del args[k : k + 2]
+    result = main(json_path=json_path, **kw)
+    sys.exit(0 if passed(result) else 1)

@@ -11,11 +11,11 @@ Public API:
     emit_verilog      standalone RTL generation
 """
 
-from .cache import CacheStats, SolutionCache, solve_key
+from .cache import CacheStats, SolutionCache, pack_solution, solve_key, unpack_solution
 from .csd import csd_nnz, csd_span, from_csd, to_csd, vector_csd_nnz
 from .cost import adder_cost, ceil_log2, min_tree_depth, min_tree_depth_hist, overlap_bits
 from .cse import CSE
-from .dais import DAISProgram, Term
+from .dais import DAISProgram, Term, qints_from_array, qints_to_array
 from .fixed_point import QInterval
 from .graph_decompose import Decomposition, decompose
 from .pipelining import PipelineReport, pipeline
@@ -43,9 +43,13 @@ __all__ = [
     "min_tree_depth_hist",
     "naive_adder_tree",
     "overlap_bits",
+    "pack_solution",
     "pipeline",
+    "qints_from_array",
+    "qints_to_array",
     "solve_key",
     "solve_cmvm",
     "to_csd",
+    "unpack_solution",
     "vector_csd_nnz",
 ]

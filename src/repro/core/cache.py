@@ -68,6 +68,37 @@ class CacheStats:
         return dict(self.__dict__)
 
 
+def pack_solution(sol) -> dict:
+    """Serialize a Solution to plain int64 numpy arrays (no pickle).
+
+    Shared by the cache entries and any artifact code that persists
+    solved programs.  Raises ``OverflowError`` if the program's qints do
+    not fit in int64."""
+    entry = dict(sol.program.to_arrays())
+    entry["matrix"] = np.ascontiguousarray(sol.matrix, dtype=np.int64)
+    entry["meta"] = np.array(
+        [sol.out_scale_exp, sol.dc, int(sol.decomposed)], dtype=np.int64
+    )
+    return entry
+
+
+def unpack_solution(entry: dict, lookup_s: float = 0.0):
+    """Exact inverse of :func:`pack_solution` (fresh Solution per call)."""
+    from .solver import Solution  # local import: solver imports this module
+
+    program = DAISProgram.from_arrays(entry)
+    out_scale_exp, dc, decomposed = entry["meta"].tolist()
+    return Solution(
+        program=program,
+        matrix=np.array(entry["matrix"], dtype=np.int64),
+        out_scale_exp=int(out_scale_exp),
+        dc=int(dc),
+        solver_time_s=lookup_s,
+        decomposed=bool(decomposed),
+        stats={"cache_hit": True},
+    )
+
+
 @dataclass
 class SolutionCache:
     """In-memory LRU of solved CMVM programs, with optional disk backing."""
@@ -112,15 +143,10 @@ class SolutionCache:
     def put(self, key: str, sol) -> None:
         """Store a Solution; silently skipped if not int64-serializable."""
         try:
-            arrays = sol.program.to_arrays()
+            entry = pack_solution(sol)
         except OverflowError:
             self.stats.skipped_unserializable += 1
             return
-        entry = dict(arrays)
-        entry["matrix"] = np.ascontiguousarray(sol.matrix, dtype=np.int64)
-        entry["meta"] = np.array(
-            [sol.out_scale_exp, sol.dc, int(sol.decomposed)], dtype=np.int64
-        )
         self._remember(key, entry)
         self.stats.puts += 1
         if self.disk_dir is not None:
@@ -139,16 +165,4 @@ class SolutionCache:
 
     @staticmethod
     def _to_solution(entry: dict, lookup_s: float):
-        from .solver import Solution  # local import: solver imports this module
-
-        program = DAISProgram.from_arrays(entry)
-        out_scale_exp, dc, decomposed = entry["meta"].tolist()
-        return Solution(
-            program=program,
-            matrix=np.array(entry["matrix"], dtype=np.int64),
-            out_scale_exp=int(out_scale_exp),
-            dc=int(dc),
-            solver_time_s=lookup_s,
-            decomposed=bool(decomposed),
-            stats={"cache_hit": True},
-        )
+        return unpack_solution(entry, lookup_s)

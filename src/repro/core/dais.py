@@ -32,6 +32,29 @@ KIND_ADD = 1  # u = (a << sh_a) + sign * (b << sh_b)
 KIND_NEG = 2  # u = -a
 
 
+def qints_to_array(qints: list[QInterval]) -> np.ndarray:
+    """Pack QIntervals into an int64 [n, 3] (lo, hi, exp) array.
+
+    Shared serialization helper for the solution cache and the design
+    artifact format.  Raises ``OverflowError`` when an endpoint does not
+    fit in int64 (callers then skip serialization)."""
+    lim = 1 << 62
+    out = np.empty((len(qints), 3), dtype=np.int64)
+    for i, q in enumerate(qints):
+        if not (-lim < q.lo <= q.hi < lim):
+            raise OverflowError("qint endpoints exceed int64 range")
+        out[i] = (q.lo, q.hi, q.exp)
+    return out
+
+
+def qints_from_array(arr: np.ndarray) -> list[QInterval]:
+    """Exact inverse of :func:`qints_to_array`."""
+    return [
+        QInterval(lo, hi, exp)
+        for lo, hi, exp in np.asarray(arr, dtype=np.int64).tolist()
+    ]
+
+
 @dataclass
 class Row:
     kind: int

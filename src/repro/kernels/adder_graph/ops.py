@@ -3,6 +3,7 @@ executor (Pallas kernel in kernel.py, pure-jnp oracle in ref.py)."""
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import jax.numpy as jnp
@@ -22,6 +23,13 @@ class AdderGraphTables:
     level_bounds : static (lo, hi) op ranges per level.
     outs  : int32 [n_out, 4] — (row, shift, sign, mask); mask zeroes the
             constant-0 outputs.
+    digest : content hash over every field that determines execution.
+            Hash/eq key on it — NOT on identity — so tables rebuilt from
+            a saved artifact (or by a second compile of the same model)
+            hit the same jit cache entry as the original instead of
+            silently re-triggering kernel compilation (``tables`` is a
+            static argument of ``adder_graph_pallas``).  The instruction
+            arrays are frozen read-only to keep the digest truthful.
     """
 
     n_inputs: int
@@ -29,12 +37,27 @@ class AdderGraphTables:
     level_bounds: tuple[tuple[int, int], ...]
     instr: np.ndarray = field(repr=False)
     outs: np.ndarray = field(repr=False)
+    digest: str = ""
 
-    def __hash__(self):  # identity hash: built once per program
-        return id(self)
+    def __post_init__(self):
+        if not self.digest:
+            object.__setattr__(self, "digest", self._content_digest())
+        for arr in (self.instr, self.outs):
+            arr.setflags(write=False)
+
+    def _content_digest(self) -> str:
+        h = hashlib.sha256(b"adder-graph-tables-v1")
+        h.update(np.array([self.n_inputs, self.n_rows], np.int64).tobytes())
+        h.update(repr(self.level_bounds).encode())
+        h.update(np.ascontiguousarray(self.instr).tobytes())
+        h.update(np.ascontiguousarray(self.outs).tobytes())
+        return h.hexdigest()
+
+    def __hash__(self):
+        return hash(self.digest)
 
     def __eq__(self, other):
-        return self is other
+        return isinstance(other, AdderGraphTables) and self.digest == other.digest
 
     @property
     def n_ops(self) -> int:

@@ -15,12 +15,15 @@ from .layers import (
     init_params,
     apply_model,
 )
-from .compiler import compile_model, CompiledDesign
+from .compiler import CompiledDesign, LayerReport, StepSpec, build_steps, compile_model
 from . import models
 
 __all__ = [
     "AvgPool2D",
     "CompiledDesign",
+    "LayerReport",
+    "StepSpec",
+    "build_steps",
     "Flatten",
     "MaxPool2D",
     "QConv2D",

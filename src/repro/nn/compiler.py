@@ -66,15 +66,49 @@ class LayerReport:
 
 
 @dataclass
+class StepSpec:
+    """Declarative description of one executor step.
+
+    The compiled design's execution pipeline is a list of these specs;
+    :func:`build_steps` turns them into jnp callables.  Because the
+    artifact loader (repro.runtime.artifact) rebuilds steps through the
+    same builder, a design restored from disk executes byte-for-byte the
+    same program as the design that was saved.
+
+    kind    one of dense / conv / requant / transpose / relu / maxpool /
+            avgpool / residual.
+    params  JSON-serializable scalars (shapes, strides, clip bounds).
+    arrays  integer numpy arrays (bias, pre-shift, requant shifts).
+    table   index into ``CompiledDesign.tables`` for CMVM kinds, else -1.
+    body    nested specs (residual only).
+    """
+
+    kind: str
+    params: dict = field(default_factory=dict)
+    arrays: dict = field(default_factory=dict)
+    table: int = -1
+    body: Optional[list["StepSpec"]] = None
+
+
+@dataclass
 class CompiledDesign:
     steps: list[Callable] = field(default_factory=list)
     reports: list[LayerReport] = field(default_factory=list)
     in_quant: Optional[QuantConfig] = None
+    in_shape: tuple = ()
     out_shape: tuple = ()
     out_qints: list[QInterval] = field(default_factory=list)
     # solve-phase accounting: n_solves / n_cache_hits / n_pool_solves /
     # solver_time_s (sum over unique CMVMs, ~0 when everything hits cache)
     solver_stats: dict = field(default_factory=dict)
+    # declarative pipeline: step specs + per-unique-CMVM instruction
+    # tables + packed DAIS programs (``DAISProgram.to_arrays`` dicts; an
+    # entry is None when a program's qints exceed int64 and cannot be
+    # serialized).  ``steps`` is always built from these via build_steps.
+    step_specs: list[StepSpec] = field(default_factory=list)
+    tables: list = field(default_factory=list)
+    programs: list = field(default_factory=list)
+    use_pallas: bool = False
 
     @property
     def total_adders(self) -> int:
@@ -133,6 +167,109 @@ class CompiledDesign:
 
 
 # ----------------------------------------------------------------------
+# Step builder: StepSpec -> executable jnp callable
+# ----------------------------------------------------------------------
+def build_steps(specs: list[StepSpec], tables: list, use_pallas: bool = False):
+    """Construct the executable pipeline from declarative step specs.
+
+    ``tables``: the design's per-unique-CMVM ``AdderGraphTables`` list.
+    Both ``compile_model`` and the artifact loader go through this
+    single builder, which is what makes save->load bit-exact.
+    """
+    return [_build_step(s, tables, use_pallas) for s in specs]
+
+
+def _build_cmvm_fn(spec: StepSpec, tables: list, use_pallas: bool):
+    tab = tables[spec.table]
+    bias = (
+        jnp.asarray(spec.arrays["bias"], jnp.int32) if "bias" in spec.arrays else None
+    )
+    shift = (
+        jnp.asarray(np.asarray(spec.arrays["shift"])[None, :], jnp.int32)
+        if "shift" in spec.arrays
+        else None
+    )
+
+    def cmvm(v, tab=tab, bias=bias, shift=shift, use_pallas=use_pallas):
+        y = adder_graph_apply(tab, v, use_pallas=use_pallas)
+        if shift is not None:
+            y = y << shift
+        return y + bias if bias is not None else y
+
+    return cmvm
+
+
+def _build_step(spec: StepSpec, tables: list, use_pallas: bool) -> Callable:
+    kind, p = spec.kind, spec.params
+    if kind == "dense":
+        f = _build_cmvm_fn(spec, tables, use_pallas)
+
+        def step(v, d_in=p["d_in"], f=f):
+            n = v.shape[0]
+            return f(v.reshape(-1, d_in)).reshape(n, -1)
+
+        return step
+    if kind == "conv":
+        f = _build_cmvm_fn(spec, tables, use_pallas)
+        h, w, cin = p["h"], p["w"], p["cin"]
+        kh, kw, sh, sw = p["kh"], p["kw"], p["sh"], p["sw"]
+        oh, ow = p["oh"], p["ow"]
+
+        def step(v, h=h, w=w, cin=cin, kh=kh, kw=kw, sh=sh, sw=sw, oh=oh, ow=ow, f=f):
+            x = v.reshape(-1, h, w, cin)
+            patches = [
+                x[:, dy : dy + sh * (oh - 1) + 1 : sh, dx : dx + sw * (ow - 1) + 1 : sw, :]
+                for dy in range(kh)
+                for dx in range(kw)
+            ]
+            cols = jnp.concatenate(patches, axis=-1)  # [B, oh, ow, kh*kw*cin]
+            y = f(cols.reshape(-1, kh * kw * cin))
+            return y.reshape(-1, oh * ow * y.shape[-1])
+
+        return step
+    if kind == "requant":
+        d = np.asarray(spec.arrays["d"], np.int64)
+
+        def step(v, d=d, lo=p["lo"], hi=p["hi"]):
+            dpos = jnp.asarray(np.maximum(d, 0)[None, :], jnp.int32)
+            dneg = jnp.asarray(np.maximum(-d, 0)[None, :], jnp.int32)
+            v = jnp.where(dpos > 0, v << dpos, v >> dneg)
+            return jnp.clip(v, lo, hi)
+
+        return step
+    if kind == "transpose":
+        def step(v, shape=tuple(p["shape"]), perm=tuple(p["perm"])):
+            n = v.shape[0]
+            return v.reshape(n, *shape).transpose(0, *[q + 1 for q in perm]).reshape(n, -1)
+
+        return step
+    if kind == "relu":
+        return lambda v: jnp.maximum(v, 0)
+    if kind in ("maxpool", "avgpool"):
+        h, w, c, ph, pw = p["h"], p["w"], p["c"], p["ph"], p["pw"]
+
+        def step(v, h=h, w=w, c=c, ph=ph, pw=pw, is_max=(kind == "maxpool")):
+            x = v.reshape(-1, h // ph, ph, w // pw, pw, c)
+            r = x.max(axis=(2, 4)) if is_max else x.sum(axis=(2, 4))
+            return r.reshape(v.shape[0], -1)
+
+        return step
+    if kind == "residual":
+        body = tuple(_build_step(s, tables, use_pallas) for s in spec.body or [])
+        sa = jnp.asarray(np.asarray(spec.arrays["sa"])[None, :], jnp.int32)
+        sb = jnp.asarray(np.asarray(spec.arrays["sb"])[None, :], jnp.int32)
+
+        def step(v, body=body, sa=sa, sb=sb):
+            u = v
+            for s in body:
+                u = s(u)
+            return (v << sa) + (u << sb)
+
+        return step
+    raise ValueError(f"unknown step kind {kind!r}")
+
+
+# ----------------------------------------------------------------------
 # qint helpers
 # ----------------------------------------------------------------------
 def _relu_qint(q: QInterval) -> QInterval:
@@ -167,35 +304,24 @@ def _exps(qints: list[QInterval], fallback: int = 0) -> np.ndarray:
     return np.array([fallback if q.is_zero else q.exp for q in qints], dtype=np.int64)
 
 
-def _requant_step(qints: list[QInterval], cfg: QuantConfig):
+def _requant_spec(qints: list[QInterval], cfg: QuantConfig) -> StepSpec:
     t = cfg.qint
     d = _exps(qints, fallback=t.exp) - t.exp
-
-    def step(v, d=d, lo=t.lo, hi=t.hi):
-        dpos = jnp.asarray(np.maximum(d, 0)[None, :], jnp.int32)
-        dneg = jnp.asarray(np.maximum(-d, 0)[None, :], jnp.int32)
-        v = jnp.where(dpos > 0, v << dpos, v >> dneg)
-        return jnp.clip(v, lo, hi)
-
-    return step
+    return StepSpec(
+        "requant", params={"lo": int(t.lo), "hi": int(t.hi)}, arrays={"d": d}
+    )
 
 
-def _align_exps_step(qints_a, qints_b):
-    """Shift two int tensors onto the common (finer) per-feature grid."""
+def _align_exps(qints_a, qints_b):
+    """Shift arrays onto the common (finer) per-feature grid + summed qints."""
     ea, eb = _exps(qints_a), _exps(qints_b)
     e = np.minimum(ea, eb)
-    sa = jnp.asarray((ea - e)[None, :], jnp.int32)
-    sb = jnp.asarray((eb - e)[None, :], jnp.int32)
     out_q = []
     for qa, qb, ee in zip(qints_a, qints_b, e):
         qa2 = QInterval(qa.lo, qa.hi, qa.exp) if not qa.is_zero else QInterval(0, 0, int(ee))
         qb2 = QInterval(qb.lo, qb.hi, qb.exp) if not qb.is_zero else QInterval(0, 0, int(ee))
         out_q.append(qa2.add(qb2))
-
-    def step(va, vb, sa=sa, sb=sb):
-        return (va << sa) + (vb << sb)
-
-    return step, out_q
+    return (ea - e).astype(np.int64), (eb - e).astype(np.int64), out_q
 
 
 # ----------------------------------------------------------------------
@@ -223,9 +349,11 @@ class _SolveSlot:
     slot alive for the design's lifetime, and the weight matrices /
     solved programs would otherwise be pinned along with it)."""
 
-    __slots__ = ("w_int", "qin", "strategy", "dc", "engine", "key", "solution", "tables")
+    __slots__ = (
+        "w_int", "qin", "strategy", "dc", "engine", "key", "solution", "tables", "idx",
+    )
 
-    def __init__(self, w_int, qin, strategy, dc, engine):
+    def __init__(self, w_int, qin, strategy, dc, engine, idx):
         self.w_int = w_int
         self.qin = qin
         self.strategy = strategy
@@ -234,6 +362,7 @@ class _SolveSlot:
         self.key = None
         self.solution: Optional[Solution] = None
         self.tables = None
+        self.idx = idx  # position in ctx.slots == design.tables index
 
 
 class _Ctx:
@@ -255,7 +384,7 @@ class _Ctx:
         )
         slot = self.slot_map.get(dedup)
         if slot is None:
-            slot = _SolveSlot(w_int, qin, self.strategy, self.dc, self.engine)
+            slot = _SolveSlot(w_int, qin, self.strategy, self.dc, self.engine, len(self.slots))
             self.slot_map[dedup] = slot
             self.slots.append(slot)
         return slot
@@ -278,6 +407,7 @@ def _solve_slots(
     cache: Optional[SolutionCache],
 ) -> dict:
     t0 = time.perf_counter()
+    cache_before = cache.stats.as_dict() if cache is not None else None
     n_hits = 0
     misses: list[_SolveSlot] = []
     for slot in slots:
@@ -316,13 +446,20 @@ def _solve_slots(
             slot.solution = sol
             if cache is not None:
                 cache.put(slot.key, sol)
-    return {
+    stats = {
         "n_solves": len(misses),
         "n_cache_hits": n_hits,
         "n_pool_solves": n_pool,
         "solver_time_s": sum(s.solution.solver_time_s for s in slots),
         "solve_phase_s": time.perf_counter() - t0,
     }
+    if cache is not None:
+        # per-compile delta of the cache counters (hits/misses/puts/
+        # disk_hits/...), so artifact-vs-cache savings are measurable
+        # even when one SolutionCache is shared across compiles.
+        after = cache.stats.as_dict()
+        stats["cache_stats"] = {k: after[k] - cache_before[k] for k in after}
+    return stats
 
 
 def compile_model(
@@ -347,12 +484,14 @@ def compile_model(
     engine for the "da" strategy ("batch" default, "heap" reference);
     both produce bit-identical designs (see repro.core.cse).
     """
-    design = CompiledDesign(in_quant=in_quant)
+    design = CompiledDesign(
+        in_quant=in_quant, in_shape=tuple(in_shape), use_pallas=use_pallas
+    )
     ctx = _Ctx(dc, strategy, max_delay_per_stage, use_pallas, design, engine)
     shape = tuple(in_shape)
     qints = [in_quant.qint] * int(np.prod(shape))
     # plan
-    steps, shape, qints = _compile_seq(model, params, shape, qints, ctx)
+    specs, shape, qints = _compile_seq(model, params, shape, qints, ctx)
     # solve
     design.solver_stats = _solve_slots(ctx.slots, jobs, cache)
     design.solver_stats["engine"] = engine
@@ -377,8 +516,14 @@ def compile_model(
     for slot in ctx.slots:
         if slot.tables is None:
             slot.tables = compile_tables(slot.solution.program)
+        design.tables.append(slot.tables)
+        try:
+            design.programs.append(slot.solution.program.to_arrays())
+        except OverflowError:
+            design.programs.append(None)  # not serializable: save_design rejects
         slot.w_int = slot.qin = slot.solution = slot.key = None
-    design.steps = steps
+    design.step_specs = specs
+    design.steps = build_steps(specs, design.tables, use_pallas)
     design.out_shape = shape
     design.out_qints = qints
     return design
@@ -404,8 +549,9 @@ def _affine_out_qints(w_int: np.ndarray, qin: list[QInterval]) -> list[QInterval
 
 
 def _cmvm(name, w, b, wq: QuantConfig, qin: list[QInterval], ctx: _Ctx):
-    """Plan one CMVM + bias. Returns (apply_fn [N,d_in]->[N,d_out], out_qints);
-    the solve itself is deferred to a _SolveSlot."""
+    """Plan one CMVM + bias. Returns ((table_idx, arrays), out_qints)
+    for a cmvm-kind StepSpec; the solve itself is deferred to a
+    _SolveSlot."""
     w_int = np.clip(
         np.round(np.asarray(w, np.float64) / wq.step), wq.qint.lo, wq.qint.hi
     ).astype(np.int64)
@@ -439,83 +585,71 @@ def _cmvm(name, w, b, wq: QuantConfig, qin: list[QInterval], ctx: _Ctx):
         (slot, name, f"{w_int.shape[0]}x{w_int.shape[1]}", n_bias, bias_bits)
     )
 
-    bias_arr = jnp.asarray(b_int, jnp.int32) if b_int is not None else None
-    shift_arr = (
-        jnp.asarray(pre_shift[None, :], jnp.int32)
-        if pre_shift is not None and pre_shift.any()
-        else None
-    )
-    use_pallas = ctx.use_pallas
-
-    def apply_fn(v, slot=slot, bias=bias_arr, shift=shift_arr):
-        y = adder_graph_apply(slot.tables, v, use_pallas=use_pallas)
-        if shift is not None:
-            y = y << shift
-        return y + bias if bias is not None else y
-
-    return apply_fn, out_qints
+    arrays: dict = {}
+    if b_int is not None:
+        arrays["bias"] = np.asarray(b_int, np.int64)
+    if pre_shift is not None and pre_shift.any():
+        arrays["shift"] = np.asarray(pre_shift, np.int64)
+    return (slot.idx, arrays), out_qints
 
 
 def _compile_seq(model, params, shape, qints, ctx):
-    steps: list[Callable] = []
+    specs: list[StepSpec] = []
     for spec, p in zip(model, params):
         if isinstance(spec, QDense):
-            step, shape, qints = _compile_dense_last(spec, p, shape, qints, ctx)
-            steps.append(step)
+            s, shape, qints = _compile_dense_last(spec, p, shape, qints, ctx)
+            specs.append(s)
             if spec.out_quant is not None:
-                steps.append(_requant_step(qints, spec.out_quant))
+                specs.append(_requant_spec(qints, spec.out_quant))
                 qints = [_requant_qint(q, spec.out_quant) for q in qints]
         elif isinstance(spec, QDenseOnAxis):
             ax = spec.axis % len(shape)
             perm = [i for i in range(len(shape)) if i != ax] + [ax]
             inv = np.argsort(perm).tolist()
             pshape = tuple(shape[i] for i in perm)
-            t_in = _transpose_step(shape, perm)
+            specs.append(StepSpec("transpose", params={"shape": list(shape), "perm": perm}))
             qints_t = _transpose_qints(qints, shape, perm)
             inner = QDense(spec.units, spec.w_quant, None, spec.use_bias)
-            step, pshape2, qints_t = _compile_dense_last(inner, p, pshape, qints_t, ctx)
-            t_out = _transpose_step(pshape2, inv)
+            s, pshape2, qints_t = _compile_dense_last(inner, p, pshape, qints_t, ctx)
+            specs.append(s)
+            specs.append(
+                StepSpec("transpose", params={"shape": list(pshape2), "perm": inv})
+            )
             shape = tuple(pshape2[i] for i in inv)
             qints = _transpose_qints(qints_t, pshape2, inv)
-            steps.append(lambda v, a=t_in, b=step, c=t_out: c(b(a(v))))
             if spec.out_quant is not None:
-                steps.append(_requant_step(qints, spec.out_quant))
+                specs.append(_requant_spec(qints, spec.out_quant))
                 qints = [_requant_qint(q, spec.out_quant) for q in qints]
         elif isinstance(spec, QConv2D):
-            step, shape, qints = _compile_conv(spec, p, shape, qints, ctx)
-            steps.append(step)
+            s, shape, qints = _compile_conv(spec, p, shape, qints, ctx)
+            specs.append(s)
             if spec.out_quant is not None:
-                steps.append(_requant_step(qints, spec.out_quant))
+                specs.append(_requant_spec(qints, spec.out_quant))
                 qints = [_requant_qint(q, spec.out_quant) for q in qints]
         elif isinstance(spec, ReLU):
-            steps.append(lambda v: jnp.maximum(v, 0))
+            specs.append(StepSpec("relu"))
             qints = [_relu_qint(q) for q in qints]
             if spec.out_quant is not None:
-                steps.append(_requant_step(qints, spec.out_quant))
+                specs.append(_requant_spec(qints, spec.out_quant))
                 qints = [_requant_qint(q, spec.out_quant) for q in qints]
         elif isinstance(spec, MaxPool2D):
-            step, shape, qints = _compile_maxpool(spec, shape, qints)
-            steps.append(step)
+            s, shape, qints = _compile_maxpool(spec, shape, qints)
+            specs.append(s)
         elif isinstance(spec, AvgPool2D):
-            step, shape, qints = _compile_avgpool(spec, shape, qints)
-            steps.append(step)
+            s, shape, qints = _compile_avgpool(spec, shape, qints)
+            specs.append(s)
         elif isinstance(spec, Flatten):
             shape = (int(np.prod(shape)),)
         elif isinstance(spec, Residual):
-            body_steps, bshape, bq = _compile_seq(spec.body, p["body"], shape, qints, ctx)
+            body_specs, bshape, bq = _compile_seq(spec.body, p["body"], shape, qints, ctx)
             assert bshape == shape, "residual body must preserve shape"
-            add_step, qints = _align_exps_step(qints, bq)
-
-            def res_step(v, body=tuple(body_steps), add=add_step):
-                u = v
-                for s in body:
-                    u = s(u)
-                return add(v, u)
-
-            steps.append(res_step)
+            sa, sb, qints = _align_exps(qints, bq)
+            specs.append(
+                StepSpec("residual", arrays={"sa": sa, "sb": sb}, body=body_specs)
+            )
         else:
             raise TypeError(f"cannot compile {spec}")
-    return steps, shape, qints
+    return specs, shape, qints
 
 
 def _compile_dense_last(spec: QDense, p, shape, qints, ctx):
@@ -525,22 +659,9 @@ def _compile_dense_last(spec: QDense, p, shape, qints, ctx):
     qarr = np.array(qints, dtype=object).reshape(lead, d_in)
     qin = [_union_all(list(qarr[:, k])) for k in range(d_in)]
     b = np.asarray(p["b"]) if spec.use_bias else None
-    apply_fn, out_q = _cmvm("dense", np.asarray(p["w"]), b, spec.w_quant, qin, ctx)
-    d_out = len(out_q)
-
-    def step(v, d_in=d_in, d_out=d_out, f=apply_fn):
-        n = v.shape[0]
-        return f(v.reshape(-1, d_in)).reshape(n, -1)
-
-    return step, shape[:-1] + (spec.units,), list(out_q) * lead
-
-
-def _transpose_step(shape, perm):
-    def step(v, shape=tuple(shape), perm=tuple(perm)):
-        n = v.shape[0]
-        return v.reshape(n, *shape).transpose(0, *[q + 1 for q in perm]).reshape(n, -1)
-
-    return step
+    (table, arrays), out_q = _cmvm("dense", np.asarray(p["w"]), b, spec.w_quant, qin, ctx)
+    s = StepSpec("dense", params={"d_in": d_in}, arrays=arrays, table=table)
+    return s, shape[:-1] + (spec.units,), list(out_q) * lead
 
 
 def _transpose_qints(qints, shape, perm):
@@ -548,14 +669,14 @@ def _transpose_qints(qints, shape, perm):
     return list(arr.transpose(perm).reshape(-1))
 
 
+def _pool_spec(kind: str, h, w, c, ph, pw) -> StepSpec:
+    return StepSpec(kind, params={"h": h, "w": w, "c": c, "ph": ph, "pw": pw})
+
+
 def _compile_maxpool(spec: MaxPool2D, shape, qints):
     h, w, c = shape
     ph, pw = spec.size
     oh, ow = h // ph, w // pw
-
-    def step(v, h=h, w=w, c=c, ph=ph, pw=pw):
-        x = v.reshape(-1, h // ph, ph, w // pw, pw, c)
-        return x.max(axis=(2, 4)).reshape(v.shape[0], -1)
 
     qarr = np.array(qints, dtype=object).reshape(h, w, c)
     new = []
@@ -566,7 +687,7 @@ def _compile_maxpool(spec: MaxPool2D, shape, qints):
                     qarr[i * ph + a, j * pw + bb, ch] for a in range(ph) for bb in range(pw)
                 ]
                 new.append(_union_all(block))
-    return step, (oh, ow, c), new
+    return _pool_spec("maxpool", h, w, c, ph, pw), (oh, ow, c), new
 
 
 def _compile_avgpool(spec: AvgPool2D, shape, qints):
@@ -577,10 +698,6 @@ def _compile_avgpool(spec: AvgPool2D, shape, qints):
     assert k & (k - 1) == 0
     shift = int(np.log2(k))
     oh, ow = h // ph, w // pw
-
-    def step(v, h=h, w=w, c=c, ph=ph, pw=pw):
-        x = v.reshape(-1, h // ph, ph, w // pw, pw, c)
-        return x.sum(axis=(2, 4)).reshape(v.shape[0], -1)
 
     qarr = np.array(qints, dtype=object).reshape(h, w, c)
     new = []
@@ -593,7 +710,7 @@ def _compile_avgpool(spec: AvgPool2D, shape, qints):
                         qq = qarr[i * ph + a, j * pw + bb, ch]
                         q = qq if q is None else q.add(qq)
                 new.append(q.shift(-shift))
-    return step, (oh, ow, c), new
+    return _pool_spec("avgpool", h, w, c, ph, pw), (oh, ow, c), new
 
 
 def _compile_conv(spec: QConv2D, p, shape, qints, ctx):
@@ -619,17 +736,14 @@ def _compile_conv(spec: QConv2D, p, shape, qints, ctx):
 
     wmat = np.asarray(p["w"]).reshape(kh * kw * cin, spec.filters)
     b = np.asarray(p["b"]) if spec.use_bias else None
-    apply_fn, out_q = _cmvm("conv", wmat, b, spec.w_quant, patch_qints, ctx)
-
-    def step(v, h=h, w=w, cin=cin, kh=kh, kw=kw, sh=sh, sw=sw, oh=oh, ow=ow, f=apply_fn):
-        x = v.reshape(-1, h, w, cin)
-        patches = [
-            x[:, dy : dy + sh * (oh - 1) + 1 : sh, dx : dx + sw * (ow - 1) + 1 : sw, :]
-            for dy in range(kh)
-            for dx in range(kw)
-        ]
-        cols = jnp.concatenate(patches, axis=-1)  # [B, oh, ow, kh*kw*cin]
-        y = f(cols.reshape(-1, kh * kw * cin))
-        return y.reshape(-1, oh * ow * y.shape[-1])
-
-    return step, (oh, ow, spec.filters), list(out_q) * (oh * ow)
+    (table, arrays), out_q = _cmvm("conv", wmat, b, spec.w_quant, patch_qints, ctx)
+    s = StepSpec(
+        "conv",
+        params={
+            "h": h, "w": w, "cin": cin, "kh": kh, "kw": kw,
+            "sh": sh, "sw": sw, "oh": oh, "ow": ow,
+        },
+        arrays=arrays,
+        table=table,
+    )
+    return s, (oh, ow, spec.filters), list(out_q) * (oh * ow)

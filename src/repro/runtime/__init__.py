@@ -1,0 +1,22 @@
+"""Deployable DA runtime: compile once, serve many.
+
+    save_design / load_design   no-pickle .npz + JSON design artifacts
+                                (cold-start in ms, zero solver calls)
+    ServeEngine                 microbatched multi-model serving engine
+    LatencyRecorder             p50/p95/p99 + throughput accounting
+"""
+
+from .artifact import FORMAT_NAME, FORMAT_VERSION, load_design, save_design
+from .engine import QueueFullError, ServeEngine
+from .metrics import LatencyRecorder, percentile
+
+__all__ = [
+    "FORMAT_NAME",
+    "FORMAT_VERSION",
+    "LatencyRecorder",
+    "QueueFullError",
+    "ServeEngine",
+    "load_design",
+    "percentile",
+    "save_design",
+]

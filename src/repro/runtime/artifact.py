@@ -1,0 +1,226 @@
+"""Compiled-design artifacts: solve once, cold-start in milliseconds.
+
+A ``CompiledDesign`` is the product of multi-second CMVM solves, but its
+execution pipeline is fully determined by plain integer data: the packed
+DAIS program of every unique CMVM (``DAISProgram.to_arrays``), the
+bias / pre-shift / requant arrays of each step, the step topology, and
+the quantization metadata.  ``save_design`` persists exactly that — a
+single no-pickle ``design.npz`` plus a human-readable ``manifest.json``
+(format ``da4ml-design`` v1) — and ``load_design`` rebuilds a design
+whose ``forward_int`` is bit-identical to the one that was saved, with
+**zero** solver calls (``solver_stats["n_solves"] == 0``).
+
+The loader reconstructs the instruction tables with ``compile_tables``
+(deterministic) and the executable steps through the same
+``repro.nn.compiler.build_steps`` builder the compiler itself uses, so
+there is no separate "deserialized" execution path to drift.  Rebuilt
+tables carry the same content digest as the originals, so a process that
+already jitted a design reuses its XLA executables for the loaded copy.
+
+Layout of ``<path>/``:
+
+    manifest.json   format/version, in/out shapes, quantization, step
+                    topology (arrays referenced by npz key), per-layer
+                    resource reports, compile-time solver stats.
+    design.npz      all integer arrays (programs, biases, shifts,
+                    requant deltas, output qints), int64, no pickle.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import asdict
+from pathlib import Path
+from typing import Union
+
+import numpy as np
+
+from ..core.dais import DAISProgram, qints_from_array, qints_to_array
+from ..kernels.adder_graph import compile_tables
+from ..nn.compiler import CompiledDesign, LayerReport, StepSpec, build_steps
+from ..nn.quant import QuantConfig
+
+FORMAT_NAME = "da4ml-design"
+FORMAT_VERSION = 1
+_PROGRAM_KEYS = ("rows", "outputs", "n_inputs")
+
+
+def _arrays_digest(arrays: dict[str, np.ndarray]) -> str:
+    """Content hash binding manifest.json to its design.npz.
+
+    The two files are replaced individually; a crash between the two
+    replaces could pair a stale manifest with fresh arrays (the npz key
+    names repeat across saves, so the mix would load without error).
+    The manifest stores this digest and the loader recomputes it, so a
+    mixed-generation artifact fails loudly instead of mis-executing."""
+    h = hashlib.sha256(b"da4ml-design-arrays-v1")
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes())
+    return h.hexdigest()
+
+
+def _sanitize(obj):
+    """Keep only JSON-serializable scalars (recursively) from a stats dict."""
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            s = _sanitize(v)
+            if s is not None:
+                out[str(k)] = s
+        return out
+    if isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return None
+
+
+def save_design(design: CompiledDesign, path: Union[str, Path]) -> Path:
+    """Persist a compiled design to ``path`` (a directory, created).
+
+    Raises ``ValueError`` if any of the design's DAIS programs could not
+    be packed into int64 arrays (interval endpoints beyond int64 — not
+    reachable for realistic quantized networks).
+    """
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+
+    for i, parr in enumerate(design.programs):
+        if parr is None:
+            raise ValueError(
+                f"program {i} is not int64-serializable; design cannot be saved"
+            )
+        for k in _PROGRAM_KEYS:
+            arrays[f"prog{i}_{k}"] = parr[k]
+
+    counter = iter(range(1 << 30))
+
+    def spec_json(s: StepSpec) -> dict:
+        entry: dict = {"kind": s.kind, "params": s.params, "table": s.table}
+        refs: dict[str, str] = {}
+        for name, arr in s.arrays.items():
+            key = f"step{next(counter)}_{name}"
+            arrays[key] = np.asarray(arr, np.int64)
+            refs[name] = key
+        entry["arrays"] = refs
+        if s.body is not None:
+            entry["body"] = [spec_json(b) for b in s.body]
+        return entry
+
+    steps_json = [spec_json(s) for s in design.step_specs]
+    try:
+        arrays["out_qints"] = qints_to_array(design.out_qints)
+    except OverflowError as e:
+        raise ValueError(f"output qints not int64-serializable: {e}") from e
+
+    assert design.in_quant is not None, "design must carry its input quantization"
+    manifest = {
+        "format": FORMAT_NAME,
+        "version": FORMAT_VERSION,
+        "arrays_sha256": _arrays_digest(arrays),
+        "in_quant": {
+            "bits": design.in_quant.bits,
+            "int_bits": design.in_quant.int_bits,
+            "signed": design.in_quant.signed,
+        },
+        "in_shape": list(design.in_shape),
+        "out_shape": list(design.out_shape),
+        "use_pallas": bool(design.use_pallas),
+        "n_programs": len(design.programs),
+        "steps": steps_json,
+        "reports": [asdict(r) for r in design.reports],
+        "solver_stats": _sanitize(design.solver_stats),
+        # rule4ml-style per-design resource summary for downstream tooling
+        "resources": {
+            "total_adders": design.total_adders,
+            "total_cost_bits": design.total_cost_bits,
+            "total_ff_bits": design.total_ff_bits,
+            "latency_cycles": design.latency_cycles,
+            "max_depth": design.max_depth,
+        },
+    }
+
+    tmp = path / "design.tmp.npz"
+    np.savez_compressed(tmp, **arrays)
+    tmp.replace(path / "design.npz")
+    tmp_manifest = path / "manifest.tmp.json"
+    tmp_manifest.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    tmp_manifest.replace(path / "manifest.json")
+    return path
+
+
+def load_design(path: Union[str, Path]) -> CompiledDesign:
+    """Rebuild a compiled design from a ``save_design`` artifact.
+
+    Cold-starts in milliseconds: no CMVM solves run; instruction tables
+    are recompiled from the packed DAIS programs and the executable
+    steps come from the shared ``build_steps`` builder, so the result is
+    bit-identical to the design that was saved.
+    """
+    t0 = time.perf_counter()
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    if manifest.get("format") != FORMAT_NAME:
+        raise ValueError(f"{path}: not a {FORMAT_NAME} artifact")
+    if manifest.get("version") != FORMAT_VERSION:
+        raise ValueError(
+            f"{path}: unsupported artifact version {manifest.get('version')}"
+        )
+    with np.load(path / "design.npz", allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files}
+    want = manifest.get("arrays_sha256")
+    if want is not None and _arrays_digest(arrays) != want:
+        raise ValueError(
+            f"{path}: design.npz does not match manifest.json "
+            "(corrupt or mixed-generation artifact)"
+        )
+
+    programs = []
+    tables = []
+    for i in range(manifest["n_programs"]):
+        parr = {k: arrays[f"prog{i}_{k}"] for k in _PROGRAM_KEYS}
+        programs.append(parr)
+        tables.append(compile_tables(DAISProgram.from_arrays(parr)))
+
+    def spec_from(entry: dict) -> StepSpec:
+        return StepSpec(
+            entry["kind"],
+            params=entry["params"],
+            arrays={name: arrays[key] for name, key in entry["arrays"].items()},
+            table=entry.get("table", -1),
+            body=(
+                [spec_from(b) for b in entry["body"]] if "body" in entry else None
+            ),
+        )
+
+    specs = [spec_from(e) for e in manifest["steps"]]
+    iq = manifest["in_quant"]
+    use_pallas = bool(manifest.get("use_pallas", False))
+    design = CompiledDesign(
+        in_quant=QuantConfig(iq["bits"], iq["int_bits"], iq["signed"]),
+        in_shape=tuple(manifest["in_shape"]),
+        out_shape=tuple(manifest["out_shape"]),
+        out_qints=qints_from_array(arrays["out_qints"]),
+        reports=[LayerReport(**r) for r in manifest["reports"]],
+        step_specs=specs,
+        tables=tables,
+        programs=programs,
+        use_pallas=use_pallas,
+    )
+    design.steps = build_steps(specs, tables, use_pallas)
+    design.solver_stats = {
+        "n_solves": 0,
+        "n_cache_hits": 0,
+        "n_pool_solves": 0,
+        "solver_time_s": 0.0,
+        "loaded_from_artifact": True,
+        "load_s": time.perf_counter() - t0,
+        "compile_solver_stats": manifest.get("solver_stats", {}),
+    }
+    return design

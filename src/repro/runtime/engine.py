@@ -1,0 +1,328 @@
+"""Microbatched serving engine for compiled DA designs.
+
+The deployment model of the paper (and hls4ml): a design is compiled
+once, then serves inference at fixed microsecond-scale latency.  This
+engine is the software analogue of the always-ready FPGA datapath — a
+multi-model registry where each registered ``CompiledDesign`` (in-memory
+or cold-started from a ``save_design`` artifact) gets:
+
+  * a bounded request queue (backpressure: block or reject when full);
+  * a dispatcher thread that drains the queue into microbatches —
+    at most ``max_batch`` requests, waiting at most ``max_wait_us``
+    after the first — mirroring serve/engine.py's slot design;
+  * bucketed batch shapes (powers of two up to ``max_batch``) so the
+    jitted integer forward pass compiles once per bucket and every
+    batch is padded to the next bucket instead of a fresh shape;
+  * per-request latency accounting (submit -> result) with p50/p95/p99
+    and throughput in ``stats()``.
+
+Requests are single samples on the integer input grid (``in_shape``,
+as ``CompiledDesign.forward_int`` consumes them); ``submit`` returns a
+``concurrent.futures.Future`` resolving to the integer output.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from pathlib import Path
+from typing import Optional, Union
+
+import jax
+import numpy as np
+
+from ..nn.compiler import CompiledDesign
+from .artifact import load_design
+from .metrics import LatencyRecorder
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` when overflow policy is "reject" and the
+    model's request queue is at capacity."""
+
+
+class _Request:
+    __slots__ = ("x", "t_submit", "future")
+
+    def __init__(self, x: np.ndarray, t_submit: float, future: Future):
+        self.x = x
+        self.t_submit = t_submit
+        self.future = future
+
+
+def _default_buckets(max_batch: int) -> tuple[int, ...]:
+    out = [1]
+    while out[-1] < max_batch:
+        out.append(min(out[-1] * 2, max_batch))
+    return tuple(out)
+
+
+class _ModelRunner(threading.Thread):
+    def __init__(
+        self,
+        name: str,
+        design: CompiledDesign,
+        max_batch: int,
+        queue_depth: int,
+        max_wait_us: float,
+        buckets: Optional[tuple[int, ...]],
+    ):
+        super().__init__(daemon=True, name=f"da4ml-serve-{name}")
+        self.model_name = name
+        self.design = design
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_us * 1e-6
+        self.buckets = tuple(sorted(buckets)) if buckets else _default_buckets(max_batch)
+        if self.buckets[-1] < max_batch:
+            raise ValueError("largest bucket must cover max_batch")
+        self.in_shape = tuple(design.in_shape)
+        self.q: queue.Queue[_Request] = queue.Queue(queue_depth)
+        self.metrics = LatencyRecorder()
+        self.n_batches = 0
+        self.n_rejected = 0
+        self._occupancy_sum = 0.0
+        self._fn = jax.jit(design.forward_int)
+        self._stop = threading.Event()
+        self._drained = threading.Event()
+
+    # -- dispatcher ----------------------------------------------------
+    def run(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch:
+                self._execute(batch)
+            elif self._stop.is_set():
+                break
+        self._fail_pending()
+        self._drained.set()
+
+    def _collect(self) -> list[_Request]:
+        try:
+            first = self.q.get(timeout=0.02)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            try:
+                # drain whatever is queued; when empty, block (GIL
+                # released, in <=20ms slices so stop() is honored even
+                # under a long batching window) instead of spinning
+                # against the submitter threads
+                batch.append(self.q.get_nowait())
+                continue
+            except queue.Empty:
+                pass
+            rem = deadline - time.perf_counter()
+            if rem <= 0 or self._stop.is_set():
+                break
+            try:
+                batch.append(self.q.get(timeout=min(rem, 0.02)))
+            except queue.Empty:
+                pass
+        return batch
+
+    def _fail_pending(self) -> None:
+        """Fail any requests still queued once the dispatcher is gone
+        (e.g. a submit that raced shutdown) instead of leaving their
+        futures to hang until the client's result() timeout."""
+        while True:
+            try:
+                r = self.q.get_nowait()
+            except queue.Empty:
+                return
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(
+                    RuntimeError(f"model {self.model_name!r}: engine shut down")
+                )
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _execute(self, batch: list[_Request]) -> None:
+        # claim the futures; drop any the client cancelled while queued
+        batch = [r for r in batch if r.future.set_running_or_notify_cancel()]
+        if not batch:
+            return
+        n = len(batch)
+        b = self._bucket(n)
+        try:
+            x = np.zeros((b, *self.in_shape), np.int32)
+            for i, r in enumerate(batch):
+                x[i] = r.x
+            y = np.asarray(self._fn(x))
+        except Exception as e:  # resolve futures instead of killing the thread
+            for r in batch:
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        for i, r in enumerate(batch):
+            r.future.set_result(y[i])
+            self.metrics.record(now - r.t_submit, now=now)
+        self.n_batches += 1
+        self._occupancy_sum += n / b
+
+    # -- control -------------------------------------------------------
+    def warmup(self) -> float:
+        """Compile every bucket shape up front; returns wall seconds."""
+        t0 = time.perf_counter()
+        for b in self.buckets:
+            np.asarray(self._fn(np.zeros((b, *self.in_shape), np.int32)))
+        return time.perf_counter() - t0
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        self._drained.wait(timeout)
+        self._fail_pending()  # catch puts that raced the dispatcher exit
+
+    def stats(self) -> dict:
+        s = self.metrics.snapshot()
+        s.update(
+            model=self.model_name,
+            n_batches=self.n_batches,
+            n_rejected=self.n_rejected,
+            queue_depth=self.q.qsize(),
+            mean_batch_occupancy=(
+                self._occupancy_sum / self.n_batches if self.n_batches else 0.0
+            ),
+            buckets=list(self.buckets),
+        )
+        return s
+
+
+class ServeEngine:
+    """Multi-model registry + microbatched dispatch over compiled designs.
+
+    Parameters
+    ----------
+    max_batch : largest microbatch (and largest shape bucket).
+    queue_depth : per-model bounded queue size (backpressure limit).
+    max_wait_us : batching window after the first queued request.
+    buckets : explicit batch-shape buckets (default: powers of two).
+    overflow : "block" (submit waits for queue space) or "reject"
+        (submit raises :class:`QueueFullError` and counts the reject).
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 256,
+        queue_depth: int = 8192,
+        max_wait_us: float = 200.0,
+        buckets: Optional[tuple[int, ...]] = None,
+        overflow: str = "block",
+    ):
+        if overflow not in ("block", "reject"):
+            raise ValueError("overflow must be 'block' or 'reject'")
+        self.max_batch = max_batch
+        self.queue_depth = queue_depth
+        self.max_wait_us = max_wait_us
+        self.buckets = buckets
+        self.overflow = overflow
+        self._runners: dict[str, _ModelRunner] = {}
+        self._lock = threading.Lock()
+
+    # -- registry ------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        design: Union[CompiledDesign, str, Path],
+        warmup: bool = False,
+    ) -> CompiledDesign:
+        """Register a design (or load one from an artifact path)."""
+        if not isinstance(design, CompiledDesign):
+            design = load_design(design)
+        runner = _ModelRunner(
+            name, design, self.max_batch, self.queue_depth,
+            self.max_wait_us, self.buckets,
+        )
+        with self._lock:
+            if name in self._runners:
+                raise ValueError(f"model {name!r} already registered")
+            self._runners[name] = runner
+        try:
+            if warmup:
+                runner.warmup()
+            runner.start()
+        except BaseException:  # failed warmup/start must not leave a dead entry
+            with self._lock:
+                self._runners.pop(name, None)
+            raise
+        return design
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            runner = self._runners.pop(name)
+        runner.stop()
+
+    def models(self) -> list[str]:
+        with self._lock:
+            return sorted(self._runners)
+
+    def _runner(self, name: str) -> _ModelRunner:
+        try:
+            return self._runners[name]
+        except KeyError:
+            raise KeyError(f"model {name!r} is not registered") from None
+
+    # -- serving -------------------------------------------------------
+    def submit(self, name: str, x: np.ndarray) -> Future:
+        """Enqueue one sample (integer grid, shape ``in_shape``)."""
+        runner = self._runner(name)
+        x = np.asarray(x)
+        if x.shape != runner.in_shape:
+            raise ValueError(
+                f"model {name!r} expects one sample of shape {runner.in_shape}, "
+                f"got {x.shape}"
+            )
+        if not np.issubdtype(x.dtype, np.integer):
+            raise TypeError(
+                f"model {name!r} expects integer-grid samples, got dtype "
+                f"{x.dtype} (quantize floats with the design's in_quant first)"
+            )
+        r = _Request(x, time.perf_counter(), Future())
+        if self.overflow == "reject":
+            try:
+                runner.q.put_nowait(r)
+            except queue.Full:
+                runner.n_rejected += 1
+                raise QueueFullError(
+                    f"queue for model {name!r} is full "
+                    f"({runner.q.maxsize} requests)"
+                ) from None
+        else:
+            runner.q.put(r)
+        return r.future
+
+    def infer(self, name: str, x: np.ndarray, timeout: Optional[float] = 30.0):
+        """Synchronous single-sample convenience wrapper."""
+        return self.submit(name, x).result(timeout)
+
+    def warmup(self, name: str) -> float:
+        return self._runner(name).warmup()
+
+    def stats(self, name: Optional[str] = None) -> dict:
+        if name is not None:
+            return self._runner(name).stats()
+        with self._lock:
+            runners = list(self._runners.items())
+        return {n: r.stats() for n, r in runners}
+
+    # -- lifecycle -----------------------------------------------------
+    def shutdown(self, timeout: float = 5.0) -> None:
+        """Stop all dispatchers after draining their queues."""
+        with self._lock:
+            runners = list(self._runners.values())
+            self._runners.clear()
+        for r in runners:
+            r.stop(timeout)
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

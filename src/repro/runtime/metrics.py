@@ -1,0 +1,68 @@
+"""Latency / throughput accounting for the serving engine.
+
+The recorder keeps raw per-request latencies (seconds, submit -> result)
+up to a cap and first/last completion timestamps; ``snapshot`` reduces
+them to the usual serving report: p50/p95/p99/mean/max latency in
+milliseconds plus the completed-request rate over the observation
+window.  Appends rely on the GIL for atomicity (single list append per
+request), so the hot path takes no locks.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of unsorted values."""
+    if not values:
+        return float("nan")
+    s = sorted(values)
+    k = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+class LatencyRecorder:
+    """Bounded per-request latency log with throughput bookkeeping."""
+
+    def __init__(self, max_samples: int = 500_000):
+        self.max_samples = max_samples
+        self._lat: list[float] = []
+        self.n_total = 0
+        self.n_dropped = 0  # recorded beyond max_samples (counted, not stored)
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+
+    def record(self, latency_s: float, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        if self.t_first is None:
+            self.t_first = now
+        self.t_last = now
+        self.n_total += 1
+        if len(self._lat) < self.max_samples:
+            self._lat.append(latency_s)
+        else:
+            self.n_dropped += 1
+
+    def reset(self) -> None:
+        self.__init__(self.max_samples)
+
+    def snapshot(self) -> dict:
+        lat = list(self._lat)  # copy: recording may continue concurrently
+        span = (
+            (self.t_last - self.t_first)
+            if (self.t_first is not None and self.t_last is not None)
+            else 0.0
+        )
+        return {
+            "n_requests": self.n_total,
+            "n_latency_samples": len(lat),
+            "window_s": span,
+            "throughput_rps": (self.n_total / span) if span > 0 else 0.0,
+            "p50_ms": percentile(lat, 50) * 1e3 if lat else float("nan"),
+            "p95_ms": percentile(lat, 95) * 1e3 if lat else float("nan"),
+            "p99_ms": percentile(lat, 99) * 1e3 if lat else float("nan"),
+            "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else float("nan"),
+            "max_ms": max(lat) * 1e3 if lat else float("nan"),
+        }

@@ -1,0 +1,179 @@
+"""Design-artifact round trips: save -> load must be bit-identical to
+the in-memory design, cold-start with zero CMVM solves, and reuse the
+jit cache via content-digest table identity (acceptance anchors of the
+deployable-runtime PR)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import (
+    AvgPool2D,
+    Flatten,
+    MaxPool2D,
+    QConv2D,
+    QDense,
+    QuantConfig,
+    ReLU,
+    apply_model,
+    compile_model,
+    init_params,
+    models,
+)
+from repro.runtime import load_design, save_design
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _small_dense():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (QDense(12, wq), ReLU(aq), QDense(5, wq))
+    return model, (10,), QuantConfig(8, 4, signed=True)
+
+
+def _small_conv():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (
+        QConv2D(4, (3, 3), w_quant=wq), ReLU(aq), MaxPool2D((2, 2)),
+        AvgPool2D((2, 2)), Flatten(), QDense(3, wq),
+    )
+    return model, (10, 10, 2), QuantConfig(8, 1, signed=False)
+
+
+def _small_mixer():
+    return models.mlp_mixer_jet(n_particles=4, n_features=4, d_ff=4)
+
+
+def _compile(builder, tmp_path, seed=0, **kw):
+    model, in_shape, in_quant = builder()
+    params, _ = init_params(jax.random.PRNGKey(seed), model, in_shape)
+    design = compile_model(model, params, in_shape, in_quant, dc=2, **kw)
+    path = save_design(design, tmp_path / "design")
+    loaded = load_design(path)
+    return model, params, in_shape, in_quant, design, loaded
+
+
+def _int_input(in_shape, in_quant, batch=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = in_quant.qint
+    return np.asarray(rng.integers(q.lo, q.hi + 1, size=(batch, *in_shape)), np.int32)
+
+
+@pytest.mark.parametrize("strategy", ["da", "latency"])
+@pytest.mark.parametrize("engine", ["batch", "heap"])
+def test_roundtrip_bit_exact_strategy_engine_grid(tmp_path, strategy, engine):
+    _, _, in_shape, in_quant, design, loaded = _compile(
+        _small_dense, tmp_path, strategy=strategy, engine=engine
+    )
+    xi = _int_input(in_shape, in_quant)
+    np.testing.assert_array_equal(
+        np.asarray(design.forward_int(xi)), np.asarray(loaded.forward_int(xi))
+    )
+    # cold start performed zero CMVM solves
+    assert loaded.solver_stats["n_solves"] == 0
+    assert loaded.solver_stats["loaded_from_artifact"] is True
+
+
+@pytest.mark.parametrize("builder", [_small_conv, _small_mixer])
+def test_roundtrip_conv_pool_mixer(tmp_path, builder):
+    """Conv/im2col, max+avg pools, transpose and residual steps all
+    survive the declarative spec round trip bit-exactly."""
+    _, _, in_shape, in_quant, design, loaded = _compile(builder, tmp_path)
+    xi = _int_input(in_shape, in_quant, batch=4)
+    np.testing.assert_array_equal(
+        np.asarray(design.forward_int(xi)), np.asarray(loaded.forward_int(xi))
+    )
+
+
+def test_loaded_float_forward_matches_ste(tmp_path):
+    """in_quant/out_qints survive: the float wrapper of the loaded design
+    still bit-matches the STE float forward pass."""
+    model, params, in_shape, in_quant, _, loaded = _compile(_small_dense, tmp_path)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(
+        rng.uniform(in_quant.lo, in_quant.hi, size=(8, *in_shape)), jnp.float64
+    )
+    y_float = apply_model(params, model, x, in_quant=in_quant)
+    np.testing.assert_allclose(
+        np.asarray(loaded.forward(x), np.float64), np.asarray(y_float), rtol=0, atol=0
+    )
+
+
+def test_tables_digest_and_reports_survive(tmp_path):
+    _, _, _, _, design, loaded = _compile(_small_dense, tmp_path)
+    # content-digest identity: rebuilt tables hash/compare equal, so the
+    # pallas jit cache (static `tables` argument) is shared across loads
+    assert len(design.tables) == len(loaded.tables) > 0
+    for a, b in zip(design.tables, loaded.tables):
+        assert a is not b
+        assert a.digest == b.digest
+        assert a == b and hash(a) == hash(b)
+    # resource reports and totals round-trip exactly
+    assert [r.__dict__ for r in loaded.reports] == [r.__dict__ for r in design.reports]
+    assert loaded.total_adders == design.total_adders
+    assert loaded.total_cost_bits == design.total_cost_bits
+    assert loaded.latency_cycles == design.latency_cycles
+    assert loaded.out_qints == design.out_qints
+    assert loaded.in_shape == design.in_shape
+    assert loaded.out_shape == design.out_shape
+
+
+def test_manifest_is_plain_json(tmp_path):
+    model, in_shape, in_quant = _small_dense()
+    params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
+    design = compile_model(model, params, in_shape, in_quant, dc=2)
+    path = save_design(design, tmp_path / "design")
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["format"] == "da4ml-design"
+    assert manifest["version"] == 1
+    assert manifest["resources"]["total_adders"] == design.total_adders
+    assert len(manifest["reports"]) == len(design.reports)
+    # npz holds no pickled objects
+    with np.load(path / "design.npz", allow_pickle=False) as z:
+        assert "out_qints" in z.files
+
+
+def test_load_rejects_bad_artifacts(tmp_path):
+    d = tmp_path / "bogus"
+    d.mkdir()
+    (d / "manifest.json").write_text(json.dumps({"format": "other"}))
+    with pytest.raises(ValueError, match="not a da4ml-design"):
+        load_design(d)
+    (d / "manifest.json").write_text(
+        json.dumps({"format": "da4ml-design", "version": 999})
+    )
+    with pytest.raises(ValueError, match="unsupported artifact version"):
+        load_design(d)
+
+
+def test_load_rejects_mixed_generation_artifact(tmp_path):
+    """manifest.json is content-bound to design.npz: pairing a stale
+    manifest with fresh arrays (crash between the two file replaces)
+    fails loudly instead of mis-executing."""
+    model, in_shape, in_quant = _small_dense()
+    params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
+    d1 = compile_model(model, params, in_shape, in_quant, dc=2)
+    params2, _ = init_params(jax.random.PRNGKey(9), model, in_shape)
+    d2 = compile_model(model, params2, in_shape, in_quant, dc=2)
+    p1 = save_design(d1, tmp_path / "gen1")
+    p2 = save_design(d2, tmp_path / "gen2")
+    (p1 / "design.npz").write_bytes((p2 / "design.npz").read_bytes())
+    with pytest.raises(ValueError, match="mixed-generation"):
+        load_design(p1)
+
+
+def test_resave_loaded_design_is_stable(tmp_path):
+    """A loaded design can itself be saved; the second-generation load
+    is still bit-identical (programs survive as packed arrays)."""
+    _, _, in_shape, in_quant, design, loaded = _compile(_small_dense, tmp_path)
+    path2 = save_design(loaded, tmp_path / "gen2")
+    gen2 = load_design(path2)
+    xi = _int_input(in_shape, in_quant, seed=7)
+    np.testing.assert_array_equal(
+        np.asarray(design.forward_int(xi)), np.asarray(gen2.forward_int(xi))
+    )

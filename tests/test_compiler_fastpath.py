@@ -60,6 +60,25 @@ def test_second_compile_skips_all_solves(jet):
     )
 
 
+def test_cache_counters_in_solver_stats(jet):
+    """compile_model surfaces the per-compile SolutionCache counter
+    deltas, so artifact-vs-cache savings are directly measurable."""
+    model, params, in_shape, in_quant = jet
+    cache = SolutionCache()
+    first = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    cs1 = first.solver_stats["cache_stats"]
+    assert cs1["hits"] == 0
+    assert cs1["misses"] == first.solver_stats["n_solves"]
+    assert cs1["puts"] == first.solver_stats["n_solves"]
+    second = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    cs2 = second.solver_stats["cache_stats"]
+    assert cs2["hits"] == second.solver_stats["n_cache_hits"] > 0
+    assert cs2["misses"] == 0 and cs2["puts"] == 0
+    # no cache -> no counters surfaced
+    plain = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
+    assert "cache_stats" not in plain.solver_stats
+
+
 def test_solver_stats_populated(jet):
     model, params, in_shape, in_quant = jet
     design = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)

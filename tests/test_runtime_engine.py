@@ -1,0 +1,149 @@
+"""Microbatched serving engine: results must be bit-identical to direct
+``forward_int``, the registry must isolate models, and backpressure /
+shape validation must fail requests loudly instead of corrupting
+batches."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.nn import QDense, QuantConfig, ReLU, compile_model, init_params
+from repro.runtime import QueueFullError, ServeEngine, save_design
+
+
+@pytest.fixture(scope="module")
+def designs():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    in_quant = QuantConfig(8, 4, signed=True)
+    out = {}
+    for name, units in (("a", 6), ("b", 3)):
+        model = (QDense(8, wq), ReLU(aq), QDense(units, wq))
+        params, _ = init_params(jax.random.PRNGKey(ord(name)), model, (8,))
+        out[name] = compile_model(model, params, (8,), in_quant, dc=2)
+    return out
+
+
+def _samples(n, in_quant=QuantConfig(8, 4, signed=True), d=8, seed=0):
+    rng = np.random.default_rng(seed)
+    q = in_quant.qint
+    return np.asarray(rng.integers(q.lo, q.hi + 1, size=(n, d)), np.int32)
+
+
+def test_engine_results_bit_identical(designs):
+    design = designs["a"]
+    xs = _samples(100)
+    want = np.asarray(design.forward_int(xs))
+    with ServeEngine(max_batch=16, max_wait_us=100.0) as eng:
+        eng.register("a", design, warmup=True)
+        futs = [eng.submit("a", x) for x in xs]
+        got = np.stack([f.result(30) for f in futs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multi_model_registry(designs):
+    xs = _samples(40)
+    want = {n: np.asarray(d.forward_int(xs)) for n, d in designs.items()}
+    with ServeEngine(max_batch=8, max_wait_us=100.0) as eng:
+        for n, d in designs.items():
+            eng.register(n, d)
+        assert eng.models() == ["a", "b"]
+        # interleave the two models' traffic
+        futs = [(n, i, eng.submit(n, xs[i])) for i in range(40) for n in ("a", "b")]
+        for n, i, f in futs:
+            np.testing.assert_array_equal(f.result(30), want[n][i])
+        with pytest.raises(ValueError, match="already registered"):
+            eng.register("a", designs["a"])
+    with pytest.raises(KeyError, match="not registered"):
+        eng.submit("a", xs[0])  # shut-down engine has an empty registry
+
+
+def test_register_from_artifact_path(designs, tmp_path):
+    path = save_design(designs["a"], tmp_path / "a")
+    xs = _samples(10, seed=5)
+    with ServeEngine(max_batch=8) as eng:
+        loaded = eng.register("a", path)
+        assert loaded.solver_stats["n_solves"] == 0
+        futs = [eng.submit("a", x) for x in xs]
+        got = np.stack([f.result(30) for f in futs])
+    np.testing.assert_array_equal(got, np.asarray(designs["a"].forward_int(xs)))
+
+
+def test_submit_validates_shape_and_dtype(designs):
+    with ServeEngine() as eng:
+        eng.register("a", designs["a"])
+        with pytest.raises(ValueError, match="expects one sample"):
+            eng.submit("a", np.zeros((3, 8), np.int32))
+        with pytest.raises(TypeError, match="integer-grid"):
+            eng.submit("a", np.zeros((8,), np.float64))
+
+
+def test_shutdown_never_leaves_hanging_futures(designs):
+    """A request in flight when shutdown is called is either served
+    during the drain or failed loudly — never left to hang until the
+    client's result() timeout (even under a long batching window)."""
+    eng = ServeEngine(max_batch=4, max_wait_us=500_000.0)
+    eng.register("a", designs["a"], warmup=True)
+    f = eng.submit("a", _samples(1, seed=6)[0])
+    eng.shutdown()
+    try:
+        assert f.result(5).shape == (6,)
+    except RuntimeError as e:
+        assert "shut down" in str(e)
+
+
+def test_backpressure_reject(designs):
+    # tiny queue + a long batching window: the dispatcher sits in its
+    # collect wait while we flood the queue, so put_nowait must overflow
+    eng = ServeEngine(
+        max_batch=4, queue_depth=4, max_wait_us=200_000.0, overflow="reject"
+    )
+    try:
+        eng.register("a", designs["a"], warmup=True)
+        xs = _samples(200, seed=1)
+        rejected = 0
+        futs = []
+        for x in xs:
+            try:
+                futs.append(eng.submit("a", x))
+            except QueueFullError:
+                rejected += 1
+        assert rejected > 0
+        assert eng.stats("a")["n_rejected"] == rejected
+        for f in futs:
+            assert f.result(30).shape == (6,)
+    finally:
+        eng.shutdown()
+
+
+def test_cancelled_future_does_not_kill_dispatcher(designs):
+    """A client cancelling a queued request must not crash the
+    dispatcher thread: the request is dropped and later traffic is
+    still served."""
+    eng = ServeEngine(max_batch=2, max_wait_us=100_000.0)
+    try:
+        eng.register("a", designs["a"], warmup=True)
+        eng.submit("a", _samples(1, seed=3)[0]).cancel()
+        xs = _samples(4, seed=4)
+        futs = [eng.submit("a", x) for x in xs]
+        got = np.stack([f.result(30) for f in futs])
+        np.testing.assert_array_equal(got, np.asarray(designs["a"].forward_int(xs)))
+    finally:
+        eng.shutdown()
+
+
+def test_stats_shape(designs):
+    with ServeEngine(max_batch=8, max_wait_us=100.0) as eng:
+        eng.register("a", designs["a"])
+        warm_s = eng.warmup("a")
+        assert warm_s > 0
+        for f in [eng.submit("a", x) for x in _samples(30, seed=2)]:
+            f.result(30)
+        s = eng.stats("a")
+    assert s["n_requests"] == 30
+    assert s["n_batches"] >= 1
+    assert 0 < s["mean_batch_occupancy"] <= 1.0
+    for k in ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "throughput_rps"):
+        assert np.isfinite(s[k]) and s[k] >= 0
+    assert s["buckets"][-1] == 8

@@ -1,0 +1,147 @@
+"""Golden tests for RTL emission (core/verilog.py) and register
+insertion (core/pipelining.py) on small hand-built DAIS programs.
+
+The toy program goldens (stage counts, FF bits) are hand-derived:
+with max_delay_per_stage=2 the values crossing the one stage boundary
+are v0 (8b), v2 (9b), v3 (11b) -> 28 FF bits; with 1 adder level per
+stage v0 crosses twice (16b), v1 once (8b), v2 twice via the y1 output
+(18b), v3 once (11b) -> 53 FF bits."""
+
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DAISProgram,
+    QInterval,
+    Term,
+    emit_verilog,
+    pipeline,
+    solve_cmvm,
+)
+
+
+def _toy_program() -> DAISProgram:
+    p = DAISProgram()
+    q8 = QInterval.from_fixed(True, 8, 8)
+    i0 = p.add_input(q8)
+    i1 = p.add_input(q8)
+    r2 = p.add_op(i0, i1, 0, 0, 1)     # x0 + x1
+    r3 = p.add_op(r2, i1, 0, 2, 1)     # r2 + (x1 << 2)
+    r4 = p.add_op(r3, i0, 0, 0, -1)    # r3 - x0
+    p.outputs = [Term(1, r4, 0), Term(-1, r2, 1)]
+    return p
+
+
+# ----------------------------------------------------------------------
+# pipelining
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "mdps,n_stages,ff_bits,stage_of_row",
+    [
+        (1, 3, 53, [0, 0, 0, 1, 2]),
+        (2, 2, 28, [0, 0, 0, 0, 1]),
+        (10, 1, 0, [0, 0, 0, 0, 0]),
+    ],
+)
+def test_pipeline_stage_and_ff_goldens(mdps, n_stages, ff_bits, stage_of_row):
+    rep = pipeline(_toy_program(), mdps)
+    assert rep.n_stages == n_stages
+    assert rep.ff_bits == ff_bits
+    assert rep.stage_of_row == stage_of_row
+    assert rep.latency_cycles == n_stages - 1
+    assert rep.ii == 1
+
+
+def test_pipeline_stages_monotone_in_depth():
+    """Tighter delay budgets can only add stages, never remove them."""
+    prog = solve_cmvm(np.array([[7, 11], [13, -5], [3, 9]]), dc=-1).program
+    stages = [pipeline(prog, mdps).n_stages for mdps in (1, 2, 3, 8)]
+    assert stages == sorted(stages, reverse=True)
+    assert stages[-1] == 1  # everything fits one stage with a huge budget
+
+
+# ----------------------------------------------------------------------
+# verilog structure
+# ----------------------------------------------------------------------
+def test_verilog_pipelined_structure_golden():
+    v = emit_verilog(_toy_program(), "toy", max_delay_per_stage=2)
+    lines = [ln.strip() for ln in v.splitlines()]
+    assert lines[0] == "module toy ("
+    assert lines[-1] == "endmodule"
+    assert "input wire clk" in v
+    # ports: 2 inputs at their qint widths, 2 outputs at 11 bits
+    assert "input wire signed [7:0] x0" in v
+    assert "input wire signed [7:0] x1" in v
+    assert v.count("output wire signed [10:0] y") == 2
+    # one register per value crossing the stage boundary (v0, v2, v3)
+    clocked = re.findall(r"(\w+) <= (\w+);", v)
+    assert sorted(dst for dst, _ in clocked) == ["v0_s1", "v2_s1", "v3_s1"]
+    assert ("v4_s1", "v3_s1 - v0_s1") in [
+        (m.group(1), m.group(2))
+        for m in re.finditer(r"assign (\w+) = (.+);", v)
+    ]
+    # outputs read stage-1 values with term shift/sign applied
+    assert "assign y0 = v4_s1;" in v
+    assert "assign y1 = -(v2_s1 <<< 1);" in v
+
+
+def test_verilog_combinational_has_no_clock():
+    v = emit_verilog(_toy_program(), "toy_comb", max_delay_per_stage=None)
+    assert "clk" not in v
+    assert "reg " not in v
+    assert "always" not in v
+    assert v.count("assign") >= 5  # 2 inputs + 3 ops + 2 outputs
+
+
+def test_verilog_constant_zero_output():
+    p = DAISProgram()
+    p.add_input(QInterval.from_fixed(True, 4, 4))
+    p.outputs = [None, Term(1, 0, 0)]
+    v = emit_verilog(p, "zeros", max_delay_per_stage=None)
+    assert "assign y0 = 0;" in v
+    assert "assign y1 = v0_s0;" in v
+
+
+def test_verilog_negation_row():
+    p = DAISProgram()
+    i0 = p.add_input(QInterval.from_fixed(True, 6, 6))
+    r1 = p.add_neg(i0)
+    p.outputs = [Term(1, r1, 0)]
+    v = emit_verilog(p, "neg", max_delay_per_stage=None)
+    assert "assign v1_s0 = -v0_s0;" in v
+
+
+def test_verilog_solver_program_wellformed():
+    """Every op row and every output of a solver-produced program must
+    appear as an assignment; stage count matches the pipeline report."""
+    sol = solve_cmvm(np.array([[3, 5, -7], [9, 1, 13], [-11, 6, 2]]), dc=2)
+    prog = sol.program
+    mdps = 2
+    rep = pipeline(prog, mdps)
+    v = emit_verilog(prog, "cmvm3", max_delay_per_stage=mdps)
+    assert v.count("input wire signed") == prog.n_inputs
+    assert v.count("output wire signed") == len(prog.outputs)
+    for j in range(len(prog.outputs)):
+        assert f"assign y{j} = " in v
+    # every non-input row gets exactly one combinational assignment
+    n_op_assigns = len(re.findall(r"assign v\d+_s\d+ = [^v;]*v\d+", v))
+    assert n_op_assigns >= prog.n_adders
+    # highest stage suffix ever declared == n_stages - 1
+    max_stage = max(int(m.group(1)) for m in re.finditer(r"v\d+_s(\d+)", v))
+    assert max_stage == rep.n_stages - 1
+    # FF golden consistency: #clocked assigns == #values crossing
+    clocked = len(re.findall(r"\w+ <= \w+;", v))
+    crossings = 0
+    last_use = list(rep.stage_of_row)
+    for i, r in enumerate(prog.rows):
+        if r.kind != 0:
+            for o in ([r.a] if r.b < 0 else [r.a, r.b]):
+                last_use[o] = max(last_use[o], rep.stage_of_row[i])
+    for t in prog.outputs:
+        if t is not None:
+            last_use[t.row] = rep.n_stages - 1
+    for i in range(len(prog.rows)):
+        crossings += max(last_use[i] - rep.stage_of_row[i], 0)
+    assert clocked == crossings
