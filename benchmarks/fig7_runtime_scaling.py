@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from repro.core import SolutionCache, solve_cmvm
+from repro.flow import SolverConfig
 
 
 def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None,
@@ -20,6 +21,7 @@ def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None,
     """Solve one random m x m matrix per size; with a cache, also time the
     warm re-solve (content-addressed hit, no CSE run)."""
     rng = np.random.default_rng(seed)
+    cfg = SolverConfig(dc=-1, engine=engine)
     rows = []
     spent = 0.0
     for m in sizes:
@@ -27,13 +29,13 @@ def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None,
             break
         mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
         t0 = time.perf_counter()
-        sol = solve_cmvm(mat, dc=-1, cache=cache, engine=engine)
+        sol = solve_cmvm(mat, config=cfg, cache=cache)
         dt = time.perf_counter() - t0
         spent += dt
         row = {"m": m, "N": m * m * bw, "seconds": dt, "adders": sol.n_adders}
         if cache is not None:
             t0 = time.perf_counter()
-            hot = solve_cmvm(mat, dc=-1, cache=cache, engine=engine)
+            hot = solve_cmvm(mat, config=cfg, cache=cache)
             row["cached_seconds"] = time.perf_counter() - t0
             assert hot.stats.get("cache_hit") and hot.n_adders == sol.n_adders
         rows.append(row)

@@ -1,10 +1,11 @@
 """Serve-load bench: compile-once / serve-many under sustained traffic.
 
-End-to-end exercise of the deployable runtime (repro.runtime): compile a
-32x32 8-bit CMVM model, round-trip it through the ``save_design`` /
-``load_design`` artifact (verifying bit-exactness and that the cold
-start performs **zero** CMVM solves), register the loaded design in the
-microbatched :class:`ServeEngine`, and drive it with a load generator:
+End-to-end exercise of the ``repro.flow`` deployment path: compile a
+32x32 8-bit CMVM model with ``Flow.compile``, round-trip it through the
+``design.save`` / ``Flow.load`` artifact (verifying bit-exactness and
+that the cold start performs **zero** CMVM solves), register the loaded
+design as version 1 of a :class:`Deployment`, and drive it with a load
+generator:
 
   closed loop   N workers, each submit -> wait -> repeat (throughput =
                 N / latency; measures sustainable service rate);
@@ -12,11 +13,18 @@ microbatched :class:`ServeEngine`, and drive it with a load generator:
                 completions (measures latency under offered load,
                 including queueing delay).
 
+After the measured phase the bench exercises a **version rollout** under
+traffic: a window of in-flight v1 requests is submitted (via
+``submit_batch``), v2 is registered — atomic alias flip, v1 drained —
+and the bench asserts the in-flight futures completed and that post-
+rollout traffic is served by v2.
+
 Prints the usual ``name,us_per_call,derived`` CSV and writes a
 ``BENCH_serve.json``-compatible report (``--json PATH``) with achieved
-throughput, p50/p95/p99 latency, batch occupancy, and artifact timings.
-Exit code 1 if the engine cannot sustain ``min_rps`` or the artifact
-round-trip is not bit-exact.
+throughput, p50/p95/p99 latency, batch occupancy, artifact timings, and
+the rollout result.  Exit code 1 if the engine cannot sustain
+``min_rps``, the artifact round-trip is not bit-exact, or the rollout
+fails.
 """
 
 from __future__ import annotations
@@ -43,21 +51,25 @@ def build_model(m: int = 32, w_bits: int = 8):
 def _compile_and_roundtrip(m, w_bits, tmpdir, seed=0):
     import jax
 
-    from repro.nn import compile_model, init_params
-    from repro.runtime import load_design, save_design
+    from repro.flow import CompileConfig, Flow, SolverConfig
+    from repro.nn import init_params
 
     model, in_shape, in_quant = build_model(m, w_bits)
     params, _ = init_params(jax.random.PRNGKey(seed), model, in_shape)
+    cfg = CompileConfig(solver=SolverConfig(dc=2))
     t0 = time.perf_counter()
-    design = compile_model(model, params, in_shape, in_quant, dc=2)
+    design = Flow.compile(model, params, in_shape, in_quant, config=cfg)
     compile_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    save_design(design, f"{tmpdir}/design")
+    design.save(f"{tmpdir}/design")
     save_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    loaded = load_design(f"{tmpdir}/design")
+    loaded = Flow.load(f"{tmpdir}/design")
     load_s = time.perf_counter() - t0
+    # second cold start: becomes v2 in the rollout phase (identical bits,
+    # distinct design object — the registry treats it as a new rollout)
+    loaded_v2 = Flow.load(f"{tmpdir}/design")
 
     rng = np.random.default_rng(seed)
     q = in_quant.qint
@@ -73,8 +85,11 @@ def _compile_and_roundtrip(m, w_bits, tmpdir, seed=0):
         "digests_match": [
             a.digest == b.digest for a, b in zip(design.tables, loaded.tables)
         ],
+        "config_roundtrip": (
+            loaded.config is not None and loaded.config.digest() == cfg.digest()
+        ),
     }
-    return loaded, in_shape, in_quant, compile_s, artifact
+    return loaded, loaded_v2, in_shape, in_quant, compile_s, artifact
 
 
 def _closed_loop(engine, name, samples, duration_s, workers, window):
@@ -137,6 +152,39 @@ def _open_loop(engine, name, samples, duration_s, target_rps, seed=0):
     return n, elapsed
 
 
+def _rollout_under_traffic(dep, v2_design, samples, duration_s=0.3):
+    """Register v2 while v1 has a window of in-flight requests: the alias
+    must flip, v1 must drain (every in-flight future completes), and a
+    short post-rollout closed loop must be served by v2."""
+    v1 = dep.active_version("bench")
+    inflight = dep.submit_batch("bench", samples[:128])
+    t0 = time.perf_counter()
+    v2 = dep.register("bench", v2_design, warmup=True)
+    rollout_s = time.perf_counter() - t0
+    completed = 0
+    for f in inflight:
+        f.result(30)
+        completed += 1
+    n_post, el_post = _closed_loop(dep, "bench", samples, duration_s, 2, 8)
+    return {
+        "from_version": v1,
+        "to_version": v2,
+        "rollout_s": rollout_s,
+        "inflight_completed": completed,
+        "inflight_submitted": len(inflight),
+        "v1_drained": dep.versions("bench") == [v2],
+        "active_version": dep.active_version("bench"),
+        "post_rollout_requests": n_post,
+        "post_rollout_rps": n_post / el_post if el_post > 0 else 0.0,
+        "ok": bool(
+            completed == len(inflight)
+            and dep.versions("bench") == [v2]
+            and dep.active_version("bench") == v2
+            and n_post > 0
+        ),
+    }
+
+
 def run(
     mode: str = "closed",
     m: int = 32,
@@ -150,11 +198,11 @@ def run(
     min_rps: float = 10_000.0,
     seed: int = 0,
 ) -> dict:
-    from repro.runtime import ServeEngine
+    from repro.flow import Flow, ServeConfig
 
     with tempfile.TemporaryDirectory() as tmpdir:
-        loaded, in_shape, in_quant, compile_s, artifact = _compile_and_roundtrip(
-            m, w_bits, tmpdir, seed
+        loaded, loaded_v2, in_shape, in_quant, compile_s, artifact = (
+            _compile_and_roundtrip(m, w_bits, tmpdir, seed)
         )
 
     rng = np.random.default_rng(seed + 1)
@@ -164,23 +212,24 @@ def run(
         for _ in range(256)
     ]
 
-    engine = ServeEngine(max_batch=max_batch, max_wait_us=max_wait_us)
-    engine.register("bench", loaded)
-    warmup_s = engine.warmup("bench")
+    dep = Flow.serve(ServeConfig(max_batch=max_batch, max_wait_us=max_wait_us))
+    dep.register("bench", loaded)  # version 1
+    warmup_s = dep.warmup("bench")
     try:
         if mode == "closed":
             n_done, elapsed = _closed_loop(
-                engine, "bench", samples, duration_s, workers, window
+                dep, "bench", samples, duration_s, workers, window
             )
         elif mode == "open":
             n_done, elapsed = _open_loop(
-                engine, "bench", samples, duration_s, target_rps, seed
+                dep, "bench", samples, duration_s, target_rps, seed
             )
         else:
             raise ValueError(f"unknown mode {mode!r}")
-        stats = engine.stats("bench")
+        stats = dep.stats("bench")
+        rollout = _rollout_under_traffic(dep, loaded_v2, samples)
     finally:
-        engine.shutdown()
+        dep.shutdown()
 
     achieved = n_done / elapsed if elapsed > 0 else 0.0
     return {
@@ -207,6 +256,7 @@ def run(
         "compile_s": compile_s,
         "engine_warmup_s": warmup_s,
         "artifact": artifact,
+        "rollout": rollout,
     }
 
 
@@ -217,6 +267,8 @@ def passed(r: dict) -> bool:
         and a["bit_exact"]
         and a["n_solves_on_load"] == 0
         and all(a["digests_match"])
+        and a["config_roundtrip"]
+        and r["rollout"]["ok"]
     )
 
 
@@ -232,7 +284,9 @@ def main(csv: bool = True, json_path=None, **kw) -> dict:
             f"artifact_bit_exact={int(r['artifact']['bit_exact'])};"
             f"load_solves={r['artifact']['n_solves_on_load']};"
             f"cold_start_ms={r['artifact']['load_s'] * 1e3:.1f};"
-            f"sustained={int(r['sustained'])}"
+            f"sustained={int(r['sustained'])};"
+            f"rollout_ok={int(r['rollout']['ok'])};"
+            f"rollout_v{r['rollout']['from_version']}to{r['rollout']['to_version']}"
         )
     if json_path:
         with open(json_path, "w") as fh:

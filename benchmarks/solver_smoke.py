@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro.core import solve_cmvm
+from repro.flow import SolverConfig
 
 SEED_REFERENCE_S = 22.4  # seed solve_cmvm on the reference machine
 PR1_REFERENCE_S = 3.1  # after PR 1's solver fast path (lazy heap engine)
@@ -33,7 +34,7 @@ def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0, check_heap_engine=True):
     rng = np.random.default_rng(seed)
     mat = rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m))
     t0 = time.perf_counter()
-    sol = solve_cmvm(mat, dc=dc, engine="batch")
+    sol = solve_cmvm(mat, config=SolverConfig(dc=dc, engine="batch"))
     dt = time.perf_counter() - t0
     result = {
         "m": m,
@@ -51,7 +52,7 @@ def run(m=64, bw=8, seed=0, dc=-1, budget_s=10.0, check_heap_engine=True):
     }
     if check_heap_engine:
         t0 = time.perf_counter()
-        heap_sol = solve_cmvm(mat, dc=dc, engine="heap")
+        heap_sol = solve_cmvm(mat, config=SolverConfig(dc=dc, engine="heap"))
         result["heap_seconds"] = time.perf_counter() - t0
         result["heap_adders"] = heap_sol.n_adders
         result["engines_identical"] = (

@@ -15,6 +15,7 @@ import time
 import numpy as np
 
 from repro.core import QInterval, SolutionCache, naive_adder_tree, solve_cmvm
+from repro.flow import SolverConfig
 from repro.core.solver import solve_task
 
 # (m, dc) -> (paper_depth, paper_adders) from Table 2 (da4ml columns)
@@ -42,10 +43,11 @@ def run(sizes=(2, 4, 8, 12, 16), dcs=(-1, 0, 2), n_trials=3, bw=8, seed=0,
         ]
         base = np.mean([naive_adder_tree(mat).n_adders for mat in mats])
         for dc in dcs:
+            cfg = SolverConfig(dc=dc, engine=engine)
             adders, depths, times = [], [], []
             for mat in mats:
                 t0 = time.perf_counter()
-                sol = solve_cmvm(mat, dc=dc, engine=engine)
+                sol = solve_cmvm(mat, config=cfg)
                 times.append(time.perf_counter() - t0)
                 assert sol.verify(), "bit-exactness violated"
                 adders.append(sol.n_adders)
@@ -72,14 +74,15 @@ def solve_wall(m=16, dc=2, n_mats=8, bw=8, seed=1, jobs=1, cache=None,
     work a model compile farms out per layer (see compile_model jobs=)."""
     rng = np.random.default_rng(seed)
     qin = [QInterval.from_fixed(True, 8, 8)] * m
+    cfg = SolverConfig(dc=dc, engine=engine)
     payloads = [
-        (rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m)), qin, "da", dc,
-         engine)
+        (rng.integers(2 ** (bw - 1) + 1, 2**bw, size=(m, m)), qin, "da",
+         cfg.to_dict())
         for _ in range(n_mats)
     ]
     t0 = time.perf_counter()
     if cache is not None:
-        sols = [solve_cmvm(p[0], dc=dc, cache=cache, engine=engine) for p in payloads]
+        sols = [solve_cmvm(p[0], config=cfg, cache=cache) for p in payloads]
     elif jobs > 1:
         try:
             with concurrent.futures.ProcessPoolExecutor(

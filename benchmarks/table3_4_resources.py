@@ -13,6 +13,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import naive_adder_tree, pipeline, solve_cmvm
+from repro.flow import SolverConfig
 
 # (bw, size, dc) -> paper adder count ('latency' baseline keyed dc=None)
 PAPER_ADDERS = {
@@ -45,7 +46,7 @@ def run(sizes=(8, 16, 32), bws=(8, 4), dcs=(0, 2, -1), seed=0):
                 }
             )
             for dc in dcs:
-                sol = solve_cmvm(mat, dc=dc)
+                sol = solve_cmvm(mat, config=SolverConfig(dc=dc))
                 assert sol.verify()
                 rows.append(
                     {

@@ -13,6 +13,7 @@ import time
 
 import jax
 
+from repro.flow import CompileConfig, SolverConfig
 from repro.nn import compile_model, init_params, models
 
 
@@ -21,8 +22,9 @@ def _bench_net(name, builder, dc=2, seed=0):
     params, _ = init_params(jax.random.PRNGKey(seed), model, in_shape)
     out = []
     for strategy in ("latency", "da"):
+        cfg = CompileConfig(strategy=strategy, solver=SolverConfig(dc=dc))
         t0 = time.perf_counter()
-        design = compile_model(model, params, in_shape, in_quant, dc=dc, strategy=strategy)
+        design = compile_model(model, params, in_shape, in_quant, config=cfg)
         dt = time.perf_counter() - t0
         out.append(
             {

@@ -15,6 +15,7 @@ from repro.core import (
     pipeline,
     solve_cmvm,
 )
+from repro.flow import SolverConfig
 from repro.kernels.adder_graph import adder_graph_apply, compile_tables
 
 # --- a random 16x16 8-bit constant matrix (paper Table 2 convention) ---
@@ -22,7 +23,8 @@ rng = np.random.default_rng(42)
 M = rng.integers(2**7 + 1, 2**8, size=(16, 16))
 
 baseline = naive_adder_tree(M)
-sol = solve_cmvm(M, dc=2)  # delay constraint: 2 extra adder levels
+# delay constraint: 2 extra adder levels
+sol = solve_cmvm(M, config=SolverConfig(dc=2))
 
 print(f"matrix 16x16, 8-bit  |  baseline adders: {baseline.n_adders}")
 print(

@@ -9,12 +9,15 @@ import numpy as np
 
 from repro.core import emit_verilog, pipeline, solve_cmvm
 from repro.core.fixed_point import QInterval
+from repro.flow import CompileConfig, SolverConfig
 from repro.nn import compile_model, init_params, models
 
 # --- single CMVM -> combinational + pipelined Verilog ---
 rng = np.random.default_rng(3)
 M = rng.integers(-32, 32, size=(8, 6))
-sol = solve_cmvm(M, qint_in=[QInterval.from_fixed(True, 8, 8)] * 8, dc=2)
+sol = solve_cmvm(
+    M, qint_in=[QInterval.from_fixed(True, 8, 8)] * 8, config=SolverConfig(dc=2)
+)
 comb = emit_verilog(sol.program, "cmvm_comb", max_delay_per_stage=None)
 piped = emit_verilog(sol.program, "cmvm_piped", max_delay_per_stage=3)
 print(f"combinational module: {len(comb.splitlines())} lines")
@@ -27,14 +30,17 @@ print("wrote /tmp/cmvm_piped.v")
 # --- whole-network resource report through the model compiler ---
 model, in_shape, in_quant = models.muon_tracker(d_in=32)
 params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
-design = compile_model(model, params, in_shape, in_quant, dc=2, strategy="da")
+design = compile_model(
+    model, params, in_shape, in_quant,
+    config=CompileConfig(strategy="da", solver=SolverConfig(dc=2)),
+)
 print("\nmuon tracker (binary inputs) DA design:")
 print(design.summary())
 print("\nper-layer Verilog emission of the first dense layer:")
 first = solve_cmvm(
     np.round(np.asarray(params[0]["w"]) / model[0].w_quant.step).astype(np.int64),
     qint_in=[in_quant.qint] * in_shape[0],
-    dc=2,
+    config=SolverConfig(dc=2),
 )
 v = emit_verilog(first.program, "dense0")
 print("\n".join(v.splitlines()[:5]) + "\n...")

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.nn import apply_model, compile_model, init_params, models
+from repro.nn import apply_model, init_params, models
 
 model, in_shape, in_quant = models.jet_tagger(w_bits=6, a_bits=8)
 key = jax.random.PRNGKey(0)
@@ -53,13 +53,18 @@ acc = (jnp.argmax(apply_model(params, model, x, in_quant=in_quant), -1) == y).me
 print(f"trained in {time.time()-t0:.1f}s, accuracy {float(acc):.1%}")
 
 # --- deploy: compile to adder graphs, compare strategies ---
+from repro.flow import CompileConfig, Flow, SolverConfig  # noqa: E402
+
 for strategy in ("latency", "da"):
-    design = compile_model(model, params, in_shape, in_quant, dc=2, strategy=strategy)
+    design = Flow.compile(
+        model, params, in_shape, in_quant,
+        config=CompileConfig(strategy=strategy, solver=SolverConfig(dc=2)),
+    )
     print(f"\n=== strategy={strategy} ===")
     print(design.summary())
 
 # --- bit-exactness of the deployed design (float64 reference) ---
-design = compile_model(model, params, in_shape, in_quant, dc=2)
+design = Flow.compile(model, params, in_shape, in_quant)
 with jax.experimental.enable_x64():
     xq = jnp.asarray(np.asarray(x[:64]), jnp.float64)
     want = apply_model(jax.tree.map(lambda a: jnp.asarray(np.asarray(a), jnp.float64), params),

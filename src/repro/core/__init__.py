@@ -19,7 +19,7 @@ from .dais import DAISProgram, Term, qints_from_array, qints_to_array
 from .fixed_point import QInterval
 from .graph_decompose import Decomposition, decompose
 from .pipelining import PipelineReport, pipeline
-from .solver import Solution, naive_adder_tree, solve_cmvm
+from .solver import Solution, config_solve_key, naive_adder_tree, solve_cmvm
 from .verilog import emit_verilog
 
 __all__ = [
@@ -34,6 +34,7 @@ __all__ = [
     "Term",
     "adder_cost",
     "ceil_log2",
+    "config_solve_key",
     "csd_nnz",
     "csd_span",
     "decompose",

@@ -82,8 +82,23 @@ def pack_solution(sol) -> dict:
     return entry
 
 
+_PROGRAM_ARRAY_KEYS = ("rows", "outputs", "n_inputs")
+
+
+def program_arrays_of(entry: dict) -> dict:
+    """The packed-program slice of a cache entry (the dict layout of
+    ``DAISProgram.to_arrays``).  Threaded into ``Solution.program_arrays``
+    so consumers (``design.programs``) reuse the already-packed arrays
+    instead of round-tripping unpack -> repack."""
+    return {k: entry[k] for k in _PROGRAM_ARRAY_KEYS}
+
+
 def unpack_solution(entry: dict, lookup_s: float = 0.0):
-    """Exact inverse of :func:`pack_solution` (fresh Solution per call)."""
+    """Exact inverse of :func:`pack_solution` (fresh Solution per call).
+
+    The returned Solution carries ``program_arrays`` aliasing the entry's
+    packed program (treated read-only by all consumers), so a warm-cache
+    compile never repacks a program it just unpacked."""
     from .solver import Solution  # local import: solver imports this module
 
     program = DAISProgram.from_arrays(entry)
@@ -96,6 +111,7 @@ def unpack_solution(entry: dict, lookup_s: float = 0.0):
         solver_time_s=lookup_s,
         decomposed=bool(decomposed),
         stats={"cache_hit": True},
+        program_arrays=program_arrays_of(entry),
     )
 
 
@@ -141,12 +157,17 @@ class SolutionCache:
         return self._to_solution(entry, time.perf_counter() - t0)
 
     def put(self, key: str, sol) -> None:
-        """Store a Solution; silently skipped if not int64-serializable."""
+        """Store a Solution; silently skipped if not int64-serializable.
+
+        On success the Solution's ``program_arrays`` is populated with
+        the freshly packed program, so even a cold compile that caches
+        its solves never packs the same program twice."""
         try:
             entry = pack_solution(sol)
         except OverflowError:
             self.stats.skipped_unserializable += 1
             return
+        sol.program_arrays = program_arrays_of(entry)
         self._remember(key, entry)
         self.stats.puts += 1
         if self.disk_dir is not None:

@@ -20,6 +20,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from ..flow.config import UNSET, SolverConfig, resolve_legacy
 from .cache import SolutionCache, solve_key
 from .cost import ceil_log2, min_tree_depth
 from .csd import csd_nnz
@@ -38,6 +39,10 @@ class Solution:
     solver_time_s: float
     decomposed: bool
     stats: dict = field(default_factory=dict)
+    # packed ``DAISProgram.to_arrays`` dict when one already exists (set
+    # by the SolutionCache on hit AND on put) — consumers treat it as
+    # read-only and skip re-packing the program (see compile_model)
+    program_arrays: Optional[dict] = field(default=None, repr=False)
 
     @property
     def n_adders(self) -> int:
@@ -100,21 +105,40 @@ def _budgets(
     return [mn + dc for mn in mins], mins
 
 
+# legacy kwarg name -> SolverConfig field
+_LEGACY_SOLVER_KWARGS = {
+    "dc": "dc",
+    "decompose_stage": "decompose",
+    "weighted": "weighted",
+    "assembly_dedup": "dedup",
+    "depth_weight": "depth_weight",
+    "engine": "engine",
+}
+
+
 def solve_cmvm(
     m: np.ndarray,
     qint_in: Optional[Sequence[QInterval]] = None,
     depth_in: Optional[Sequence[int]] = None,
-    dc: int = -1,
-    decompose_stage: bool = True,
-    weighted: bool = True,
-    assembly_dedup: bool = True,
-    depth_weight: float = 0.0,
-    engine: str = "batch",
+    dc=UNSET,
+    decompose_stage=UNSET,
+    weighted=UNSET,
+    assembly_dedup=UNSET,
+    depth_weight=UNSET,
+    engine=UNSET,
     program: Optional[DAISProgram] = None,
     input_rows: Optional[Sequence[int]] = None,
     cache: Optional[SolutionCache] = None,
+    config: Optional[SolverConfig] = None,
 ) -> Solution:
     """Optimize ``y = x @ m`` into an adder graph.
+
+    The canonical way to set solver options is ``config=``, a
+    :class:`repro.flow.SolverConfig`.  The individual option kwargs
+    (``dc``, ``decompose_stage``, ``weighted``, ``assembly_dedup``,
+    ``depth_weight``, ``engine``) are a deprecated shim kept for one
+    release: they construct the equivalent config and delegate, so both
+    spellings produce bit-identical programs.
 
     Parameters
     ----------
@@ -122,18 +146,59 @@ def solve_cmvm(
     qint_in : per-input quantized intervals (default: signed 8-bit ints).
     depth_in : per-input adder depths (default 0; used when chaining
         CMVMs, e.g. consecutive NN layers).
-    dc : delay constraint — extra adder depth beyond per-output minimum
-        (-1 = unconstrained, as in the paper's tables).
-    decompose_stage : enable stage 1 (disabled automatically for dc=0
-        where the decomposition is provably trivial).
-    engine : CSE frequency engine, ``"batch"`` (vectorized batch-scored
-        candidate array, the fast default) or ``"heap"`` (exact lazy
-        max-heap reference).  Both produce identical DAIS programs.
+    config : :class:`SolverConfig` — dc (delay constraint, -1 =
+        unconstrained as in the paper's tables), CSE ``engine`` ("batch"
+        vectorized default / "heap" exact reference, bit-identical),
+        stage-1 ``decompose``, ``weighted``/``dedup``/``depth_weight``
+        CSE scoring knobs.
     program / input_rows : optionally extend an existing program whose
         rows ``input_rows`` are this CMVM's inputs (NN layer chaining).
     cache : optional content-addressed :class:`SolutionCache`; only used
         on the fresh-program path (not when extending via ``program``).
     """
+    legacy = {
+        name: val
+        for name, val in (
+            ("dc", dc),
+            ("decompose_stage", decompose_stage),
+            ("weighted", weighted),
+            ("assembly_dedup", assembly_dedup),
+            ("depth_weight", depth_weight),
+            ("engine", engine),
+        )
+        if val is not UNSET
+    }
+    config = resolve_legacy(
+        "solve_cmvm", config, legacy, SolverConfig,
+        lambda lg: SolverConfig(**{_LEGACY_SOLVER_KWARGS[k]: v for k, v in lg.items()}),
+    )
+    return _solve_cmvm(
+        m, qint_in, depth_in, config, program=program, input_rows=input_rows, cache=cache
+    )
+
+
+def _solve_cmvm(
+    m: np.ndarray,
+    qint_in: Optional[Sequence[QInterval]],
+    depth_in: Optional[Sequence[int]],
+    cfg: SolverConfig,
+    program: Optional[DAISProgram] = None,
+    input_rows: Optional[Sequence[int]] = None,
+    cache: Optional[SolutionCache] = None,
+) -> Solution:
+    """Config-consuming solver core (all public paths delegate here)."""
+    if not isinstance(cfg, SolverConfig):
+        from ..flow.config import ConfigError
+
+        raise ConfigError(
+            f"solve_cmvm: config must be a SolverConfig, got {type(cfg).__name__}"
+        )
+    dc = cfg.dc
+    decompose_stage = cfg.decompose
+    weighted = cfg.weighted
+    assembly_dedup = cfg.dedup
+    depth_weight = cfg.depth_weight
+    engine = cfg.engine
     t0 = time.perf_counter()
     m_int, scale_exp = _integerize(m)
     d_in, d_out = m_int.shape
@@ -146,18 +211,9 @@ def solve_cmvm(
         if depth_in is None:
             depth_in = [0] * d_in
         if cache is not None:
-            key = solve_key(
-                m_int,
-                qint_in,
-                depth_in,
-                dc=dc,
-                decompose_stage=decompose_stage,
-                weighted=weighted,
-                assembly_dedup=assembly_dedup,
-                depth_weight=depth_weight,
-                engine=engine,
-                kind="da",
-            )
+            # cache identity = matrix/qints/depths + the config digest
+            # (one definition of "same solve" across solver and compiler)
+            key = solve_key(m_int, qint_in, depth_in, kind="da", solver=cfg.digest())
             hit = cache.get(key)
             if hit is not None:
                 hit.out_scale_exp = scale_exp
@@ -246,45 +302,45 @@ def solve_cmvm(
     return sol
 
 
+def config_solve_key(
+    m_int, qint_in, depth_in, cfg: SolverConfig, kind: str = "da"
+) -> str:
+    """Cache key of one solve under ``cfg`` — exactly the key
+    ``solve_cmvm(..., config=cfg, cache=...)`` uses internally, so the
+    compiler's deferred-solve path and direct solver calls share cache
+    entries by construction."""
+    return solve_key(m_int, qint_in, depth_in, kind=kind, solver=cfg.digest())
+
+
 def default_solve_key(
     m_int, qint_in, depth_in, dc: int, kind: str = "da",
     engine: Optional[str] = None,
 ) -> str:
-    """Cache key for a ``solve_cmvm`` call that leaves every solver option
-    at its default (as ``compile_model``'s solve phase issues them), with
-    the CSE ``engine`` optionally overridden.
-
-    The option values are read off ``solve_cmvm``'s signature so the key
-    can never drift from the defaults actually used to solve.
-    """
-    import inspect
-
-    sig = inspect.signature(solve_cmvm)
-    opts = {
-        name: sig.parameters[name].default
-        for name in (
-            "decompose_stage", "weighted", "assembly_dedup", "depth_weight",
-            "engine",
-        )
-    }
-    if engine is not None:
-        opts["engine"] = engine
-    return solve_key(m_int, qint_in, depth_in, dc=dc, kind=kind, **opts)
+    """Deprecated shim: cache key for a solve with every option at its
+    :class:`SolverConfig` default (``engine`` optionally overridden).
+    Use :func:`config_solve_key`."""
+    cfg = SolverConfig(dc=dc) if engine is None else SolverConfig(dc=dc, engine=engine)
+    return config_solve_key(m_int, qint_in, depth_in, cfg, kind=kind)
 
 
 def solve_task(payload) -> "Solution":
     """One CMVM solve from a picklable payload
-    ``(w_int, qin, strategy, dc[, engine])`` (4-tuples solve with the
-    default engine).
+    ``(w_int, qin, strategy, solver_config_dict)`` — the compiler's
+    deferred-solve unit.  Legacy ``(w_int, qin, strategy, dc[, engine])``
+    tuples are still accepted.
 
     Lives in this jax-free module so process-pool workers (see
     ``repro.nn.compiler``) import only numpy-land code.
     """
-    w_int, qin, strategy, dc = payload[:4]
-    engine = payload[4] if len(payload) > 4 else "batch"
+    w_int, qin, strategy, opts = payload[:4]
+    if isinstance(opts, dict):
+        cfg = SolverConfig.from_dict(opts)
+    else:  # legacy payload: opts is dc, optional 5th element is engine
+        engine = payload[4] if len(payload) > 4 else "batch"
+        cfg = SolverConfig(dc=opts, engine=engine)
     if strategy == "latency":
         return naive_adder_tree(w_int, qint_in=qin)
-    return solve_cmvm(w_int, qint_in=qin, dc=dc, engine=engine)
+    return _solve_cmvm(w_int, qin, None, cfg)
 
 
 def naive_adder_tree(

@@ -1,0 +1,63 @@
+"""repro.flow — the one coherent entrypoint for the da4ml pipeline.
+
+Typed configs (importable without jax — stdlib only):
+
+    SolverConfig    one CMVM solve           (repro.core.solve_cmvm)
+    CompileConfig   one model compile        (repro.nn.compile_model)
+    ServeConfig     one serving deployment   (repro.runtime engine)
+
+Facade (loaded lazily, pulls in jax):
+
+    Flow            Flow.compile / Flow.load / Flow.serve
+    Deployment      versioned model rollout over a ServeEngine
+    Design          alias of repro.nn.CompiledDesign (save/load methods)
+
+Quickstart::
+
+    from repro.flow import CompileConfig, Flow, ServeConfig, SolverConfig
+
+    design = Flow.compile(model, params, in_shape, in_quant,
+                          config=CompileConfig(solver=SolverConfig(dc=2)))
+    design.save("artifacts/jet")
+
+    dep = Flow.serve(ServeConfig(max_batch=256))
+    dep.register("jet", Design.load("artifacts/jet"))   # -> version 1
+    y = dep.infer("jet", x_int)
+    dep.register("jet", new_design)                     # v2: flip + drain v1
+
+The facade symbols are exported via module ``__getattr__`` (PEP 562) so
+``from repro.flow.config import SolverConfig`` — the import the numpy-only
+solver core uses — never drags in jax.
+"""
+
+from .config import UNSET, CompileConfig, ConfigError, ServeConfig, SolverConfig
+
+__all__ = [
+    "UNSET",
+    "CompileConfig",
+    "CompiledDesign",
+    "ConfigError",
+    "Deployment",
+    "Design",
+    "Flow",
+    "ServeConfig",
+    "SolverConfig",
+]
+
+_LAZY = ("Flow", "Deployment", "Design", "CompiledDesign")
+
+
+def __getattr__(name: str):
+    if name in ("Flow", "Deployment"):
+        from . import facade
+
+        return getattr(facade, name)
+    if name in ("Design", "CompiledDesign"):
+        from ..nn.compiler import CompiledDesign
+
+        return CompiledDesign
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

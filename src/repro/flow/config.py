@@ -1,0 +1,294 @@
+"""Typed configuration objects for the ``repro.flow`` API.
+
+One frozen dataclass per pipeline stage:
+
+    SolverConfig    options of one CMVM solve (repro.core.solve_cmvm)
+    CompileConfig   options of one model compile (repro.nn.compile_model),
+                    nesting a SolverConfig
+    ServeConfig     options of one serving deployment (repro.runtime /
+                    repro.flow.Deployment)
+
+Each config validates on construction, round-trips through
+``to_dict``/``from_dict`` (plain JSON-serializable values), and exposes a
+stable content ``digest()`` — a sha256 over a versioned canonical JSON
+form.  ``SolutionCache`` keys and design-artifact manifests derive from
+these digests, so "same config" has exactly one definition across the
+solver cache, the compiler, and the artifact store (instead of each
+layer hashing its own ad-hoc kwarg tuple).
+
+Runtime-only fields that cannot affect the produced design — the live
+``cache`` handle and the ``jobs`` parallelism of ``CompileConfig`` — are
+excluded from ``to_dict``/``digest`` (``jobs`` is serialized but not
+digested; ``cache`` is neither).
+
+This module is importable without jax or numpy (stdlib only), so the
+solver's process-pool workers and numpy-only benches can use it freely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, ClassVar, Optional
+
+_DIGEST_VERSION = "da4ml-flow-config-v1"
+
+
+class _Unset:
+    """Sentinel for legacy-kwarg shims (distinguishes "not passed" from
+    an explicit default).  Singleton; reprs as ``UNSET`` so shimmed
+    signatures stay readable (and API-snapshot stable)."""
+
+    _instance: Optional["_Unset"] = None
+
+    def __new__(cls) -> "_Unset":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:
+        return "UNSET"
+
+
+UNSET = _Unset()
+
+
+class ConfigError(ValueError):
+    """Invalid configuration value."""
+
+
+def resolve_legacy(
+    api: str,
+    config: Optional["_ConfigBase"],
+    legacy: dict,
+    config_cls: type,
+    build: Callable[[dict], "_ConfigBase"],
+) -> "_ConfigBase":
+    """Shared deprecation-shim logic for the legacy-kwarg entrypoints
+    (``solve_cmvm``, ``compile_model``, ``ServeEngine``).
+
+    ``legacy`` holds the explicitly-passed legacy kwargs (UNSET values
+    filtered by the caller).  Passing both spellings is a loud
+    ``TypeError``; the legacy spelling warns ``DeprecationWarning`` once
+    per call site; ``build(legacy)`` constructs the equivalent config.
+    A ``config`` of the wrong type is rejected here so mix-ups like
+    ``Flow.compile(..., config=SolverConfig(...))`` fail with a named
+    error instead of an opaque AttributeError downstream.
+    """
+    if config is not None:
+        if legacy:
+            raise TypeError(
+                f"{api}: pass either config= or the legacy option kwargs "
+                f"({sorted(legacy)}), not both"
+            )
+        if not isinstance(config, config_cls):
+            raise ConfigError(
+                f"{api}: config must be a {config_cls.__name__}, "
+                f"got {type(config).__name__}"
+            )
+        return config
+    if legacy:
+        warnings.warn(
+            f"{api}'s option kwargs are deprecated; pass "
+            f"config=repro.flow.{config_cls.__name__}(...) instead",
+            DeprecationWarning,
+            stacklevel=3,  # helper -> shim -> caller
+        )
+    return build(legacy)
+
+
+@dataclass(frozen=True)
+class _ConfigBase:
+    # subclass knobs (ClassVar: not dataclass fields)
+    _RUNTIME_ONLY: ClassVar[tuple] = ()  # excluded from to_dict AND digest
+    _DIGEST_EXCLUDE: ClassVar[tuple] = ()  # in to_dict but excluded from digest
+    _NESTED: ClassVar[dict] = {}  # field name -> nested config class
+
+    def to_dict(self) -> dict:
+        """Plain JSON-serializable dict (drops runtime-only fields)."""
+        out: dict = {}
+        for f in dataclasses.fields(self):
+            if f.name in self._RUNTIME_ONLY:
+                continue
+            v = getattr(self, f.name)
+            if isinstance(v, _ConfigBase):
+                v = v.to_dict()
+            elif isinstance(v, tuple):
+                v = list(v)
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "_ConfigBase":
+        """Inverse of :meth:`to_dict`; rejects unknown keys."""
+        if not isinstance(d, dict):
+            raise ConfigError(f"{cls.__name__}.from_dict expects a dict, got {type(d).__name__}")
+        names = {f.name for f in dataclasses.fields(cls)} - set(cls._RUNTIME_ONLY)
+        unknown = set(d) - names
+        if unknown:
+            raise ConfigError(f"{cls.__name__}: unknown config keys {sorted(unknown)}")
+        kw = dict(d)
+        for name, sub in cls._NESTED.items():
+            if name in kw and isinstance(kw[name], dict):
+                kw[name] = sub.from_dict(kw[name])
+        return cls(**kw)
+
+    def digest(self) -> str:
+        """sha256 content digest of the config identity (stable across
+        processes; changes iff a digested field changes)."""
+        d = self.to_dict()
+        for name in self._DIGEST_EXCLUDE:
+            d.pop(name, None)
+        payload = json.dumps(
+            [_DIGEST_VERSION, type(self).__name__, d], sort_keys=True, separators=(",", ":")
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+    def replace(self, **changes: Any) -> "_ConfigBase":
+        """Functional update (configs are frozen)."""
+        return dataclasses.replace(self, **changes)
+
+    def _require(self, cond: bool, msg: str) -> None:
+        if not cond:
+            raise ConfigError(f"{type(self).__name__}: {msg}")
+
+
+@dataclass(frozen=True)
+class SolverConfig(_ConfigBase):
+    """Options of one CMVM solve (``y = x @ M`` -> DAIS adder graph).
+
+    dc            delay constraint: extra adder-depth levels allowed
+                  beyond each output's minimum (-1 = unconstrained).
+    engine        CSE frequency engine: "batch" (vectorized, default) or
+                  "heap" (exact lazy max-heap reference); bit-identical.
+    decompose     enable stage-1 graph decomposition (M = M1 @ M2).
+    weighted      weight CSE pair scores by operand width.
+    dedup         deduplicate identical terms during assembly.
+    depth_weight  depth penalty mixed into the CSE score (0 = off).
+    """
+
+    dc: int = -1
+    engine: str = "batch"
+    decompose: bool = True
+    weighted: bool = True
+    dedup: bool = True
+    depth_weight: float = 0.0
+
+    def __post_init__(self) -> None:
+        self._require(isinstance(self.dc, int) and self.dc >= -1, f"dc must be >= -1, got {self.dc}")
+        self._require(
+            self.engine in ("batch", "heap"),
+            f"unknown CSE engine {self.engine!r} (expected 'batch' or 'heap')",
+        )
+        self._require(
+            isinstance(self.depth_weight, (int, float)) and self.depth_weight >= 0.0,
+            f"depth_weight must be >= 0, got {self.depth_weight}",
+        )
+
+
+def _default_compile_solver() -> SolverConfig:
+    # compile_model's historical default is dc=2 (vs the solver-level
+    # default dc=-1 used for the paper's unconstrained tables)
+    return SolverConfig(dc=2)
+
+
+@dataclass(frozen=True)
+class CompileConfig(_ConfigBase):
+    """Options of one model compile (``repro.nn.compile_model``).
+
+    strategy             "da" (CMVM solver) or "latency" (per-output CSD
+                         trees, the hls4ml latency-strategy baseline).
+    max_delay_per_stage  pipelining budget per register stage.
+    use_pallas           execute CMVMs through the Pallas adder-graph
+                         kernel instead of the jnp gather executor.
+    jobs                 solver process-pool width (None = cpu_count,
+                         1 = in-process serial); never changes the bits.
+    cache                optional live ``SolutionCache`` handle; runtime
+                         only — excluded from to_dict/digest.
+    solver               nested :class:`SolverConfig` (default dc=2).
+    """
+
+    _RUNTIME_ONLY: ClassVar[tuple] = ("cache",)
+    _DIGEST_EXCLUDE: ClassVar[tuple] = ("jobs",)
+    _NESTED: ClassVar[dict] = {"solver": SolverConfig}
+
+    strategy: str = "da"
+    max_delay_per_stage: int = 5
+    use_pallas: bool = False
+    jobs: Optional[int] = None
+    cache: Optional[Any] = None
+    solver: SolverConfig = field(default_factory=_default_compile_solver)
+
+    def __post_init__(self) -> None:
+        self._require(
+            self.strategy in ("da", "latency"),
+            f"unknown strategy {self.strategy!r} (expected 'da' or 'latency')",
+        )
+        self._require(
+            isinstance(self.max_delay_per_stage, int) and self.max_delay_per_stage >= 1,
+            f"max_delay_per_stage must be >= 1, got {self.max_delay_per_stage}",
+        )
+        self._require(
+            self.jobs is None or (isinstance(self.jobs, int) and self.jobs >= 1),
+            f"jobs must be None or >= 1, got {self.jobs}",
+        )
+        self._require(
+            isinstance(self.solver, SolverConfig),
+            f"solver must be a SolverConfig, got {type(self.solver).__name__}",
+        )
+        self._require(
+            self.cache is None or (hasattr(self.cache, "get") and hasattr(self.cache, "put")),
+            "cache must be None or a SolutionCache-like object with get/put",
+        )
+
+
+@dataclass(frozen=True)
+class ServeConfig(_ConfigBase):
+    """Options of one serving deployment (microbatched engine).
+
+    max_batch     largest microbatch (and largest jit shape bucket).
+    max_wait_us   batching window after the first queued request.
+    queue_depth   bounded per-model request queue (backpressure limit).
+    backpressure  "block" (submit waits for queue space) or "reject"
+                  (submit raises / fails the future with QueueFullError).
+    buckets       explicit batch-shape buckets (None: powers of two up
+                  to max_batch); the largest bucket must cover max_batch.
+    """
+
+    max_batch: int = 256
+    max_wait_us: float = 200.0
+    queue_depth: int = 8192
+    backpressure: str = "block"
+    buckets: Optional[tuple] = None
+
+    def __post_init__(self) -> None:
+        self._require(
+            isinstance(self.max_batch, int) and self.max_batch >= 1,
+            f"max_batch must be >= 1, got {self.max_batch}",
+        )
+        self._require(
+            isinstance(self.max_wait_us, (int, float)) and self.max_wait_us >= 0,
+            f"max_wait_us must be >= 0, got {self.max_wait_us}",
+        )
+        self._require(
+            isinstance(self.queue_depth, int) and self.queue_depth >= 1,
+            f"queue_depth must be >= 1, got {self.queue_depth}",
+        )
+        self._require(
+            self.backpressure in ("block", "reject"),
+            f"backpressure must be 'block' or 'reject', got {self.backpressure!r}",
+        )
+        if self.buckets is not None:
+            buckets = tuple(sorted(int(b) for b in self.buckets))
+            self._require(
+                len(buckets) > 0 and all(b >= 1 for b in buckets),
+                f"buckets must be positive ints, got {self.buckets!r}",
+            )
+            self._require(
+                buckets[-1] >= self.max_batch,
+                f"largest bucket ({buckets[-1]}) must cover max_batch ({self.max_batch})",
+            )
+            object.__setattr__(self, "buckets", buckets)

@@ -35,9 +35,10 @@ from ..core.fixed_point import QInterval
 from ..core.pipelining import pipeline
 from ..core.solver import (
     Solution,
-    default_solve_key,
+    config_solve_key,
     solve_task,
 )
+from ..flow.config import UNSET, CompileConfig, SolverConfig, resolve_legacy
 from ..kernels.adder_graph import adder_graph_apply, compile_tables
 from .layers import (
     AvgPool2D,
@@ -109,6 +110,27 @@ class CompiledDesign:
     tables: list = field(default_factory=list)
     programs: list = field(default_factory=list)
     use_pallas: bool = False
+    # the CompileConfig that produced this design (embedded in saved
+    # artifact manifests; None for designs loaded from pre-config
+    # artifacts or built by hand)
+    config: Optional[CompileConfig] = None
+
+    # ------------------------------------------------------------------
+    def save(self, path):
+        """Persist this design as a ``da4ml-design`` artifact directory
+        (see :func:`repro.runtime.save_design`); the compile config is
+        embedded in the manifest."""
+        from ..runtime.artifact import save_design  # lazy: runtime imports nn
+
+        return save_design(self, path)
+
+    @classmethod
+    def load(cls, path) -> "CompiledDesign":
+        """Rebuild a design from a ``save_design`` artifact — millisecond
+        cold start, zero CMVM solves, bit-identical execution."""
+        from ..runtime.artifact import load_design  # lazy: runtime imports nn
+
+        return load_design(path)
 
     @property
     def total_adders(self) -> int:
@@ -350,15 +372,14 @@ class _SolveSlot:
     solved programs would otherwise be pinned along with it)."""
 
     __slots__ = (
-        "w_int", "qin", "strategy", "dc", "engine", "key", "solution", "tables", "idx",
+        "w_int", "qin", "strategy", "solver_cfg", "key", "solution", "tables", "idx",
     )
 
-    def __init__(self, w_int, qin, strategy, dc, engine, idx):
+    def __init__(self, w_int, qin, strategy, solver_cfg, idx):
         self.w_int = w_int
         self.qin = qin
         self.strategy = strategy
-        self.dc = dc
-        self.engine = engine
+        self.solver_cfg: SolverConfig = solver_cfg
         self.key = None
         self.solution: Optional[Solution] = None
         self.tables = None
@@ -366,25 +387,24 @@ class _SolveSlot:
 
 
 class _Ctx:
-    def __init__(self, dc, strategy, mdps, use_pallas, design, engine):
-        self.dc = dc
-        self.strategy = strategy
-        self.mdps = mdps
-        self.use_pallas = use_pallas
+    def __init__(self, cfg: CompileConfig, design):
+        self.cfg = cfg
+        self.strategy = cfg.strategy
+        self.mdps = cfg.max_delay_per_stage
         self.design = design
-        self.engine = engine
+        self._solver_digest = cfg.solver.digest()
         self.slots: list[_SolveSlot] = []
         self.slot_map: dict = {}
         self.pending_reports: list = []
 
     def request(self, w_int: np.ndarray, qin: list[QInterval]) -> _SolveSlot:
         dedup = (
-            self.strategy, self.dc, self.engine,
+            self.strategy, self._solver_digest,
             w_int.shape, w_int.tobytes(), tuple(qin),
         )
         slot = self.slot_map.get(dedup)
         if slot is None:
-            slot = _SolveSlot(w_int, qin, self.strategy, self.dc, self.engine, len(self.slots))
+            slot = _SolveSlot(w_int, qin, self.strategy, self.cfg.solver, len(self.slots))
             self.slot_map[dedup] = slot
             self.slots.append(slot)
         return slot
@@ -392,13 +412,11 @@ class _Ctx:
 
 def _slot_key(slot: _SolveSlot) -> str:
     """Cache key; matches solve_cmvm's internal key for the "da" path
-    (options read off solve_cmvm's signature, so they cannot drift)."""
+    (both derive from the SolverConfig digest, so they cannot drift)."""
     depth_in = [0] * len(slot.qin)
     if slot.strategy == "latency":
         return solve_key(slot.w_int, slot.qin, depth_in, kind="latency")
-    return default_solve_key(
-        slot.w_int, slot.qin, depth_in, dc=slot.dc, engine=slot.engine
-    )
+    return config_solve_key(slot.w_int, slot.qin, depth_in, slot.solver_cfg)
 
 
 def _solve_slots(
@@ -421,7 +439,9 @@ def _solve_slots(
         misses.append(slot)
     n_pool = 0
     if misses:
-        payloads = [(s.w_int, s.qin, s.strategy, s.dc, s.engine) for s in misses]
+        payloads = [
+            (s.w_int, s.qin, s.strategy, s.solver_cfg.to_dict()) for s in misses
+        ]
         results: Optional[list[Solution]] = None
         jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
         if jobs_eff != 1 and len(misses) > 1:
@@ -462,39 +482,109 @@ def _solve_slots(
     return stats
 
 
+# legacy kwarg name -> how it maps into CompileConfig
+_LEGACY_COMPILE_DEFAULTS = {
+    "dc": 2,
+    "strategy": "da",
+    "max_delay_per_stage": 5,
+    "use_pallas": False,
+    "jobs": None,
+    "cache": None,
+    "engine": "batch",
+}
+
+
 def compile_model(
     model: Sequential,
     params: list,
     in_shape: tuple[int, ...],
     in_quant: QuantConfig,
-    dc: int = 2,
-    strategy: str = "da",
-    max_delay_per_stage: int = 5,
-    use_pallas: bool = False,
-    jobs: Optional[int] = None,
-    cache: Optional[SolutionCache] = None,
-    engine: str = "batch",
+    dc=UNSET,
+    strategy=UNSET,
+    max_delay_per_stage=UNSET,
+    use_pallas=UNSET,
+    jobs=UNSET,
+    cache=UNSET,
+    engine=UNSET,
+    config: Optional[CompileConfig] = None,
 ) -> CompiledDesign:
     """Compile a quantized Sequential into a bit-exact integer design.
 
-    ``jobs``: CMVM solver parallelism — None uses ``os.cpu_count()``,
-    1 forces in-process serial solves; any value produces bit-identical
-    designs.  ``cache``: optional :class:`SolutionCache` so repeated
-    compiles skip solved CMVMs entirely.  ``engine``: CSE frequency
-    engine for the "da" strategy ("batch" default, "heap" reference);
-    both produce bit-identical designs (see repro.core.cse).
+    The canonical way to set options is ``config=``, a
+    :class:`repro.flow.CompileConfig` (this is what ``Flow.compile``
+    passes).  The individual option kwargs are a deprecated shim kept
+    for one release: they construct the equivalent config and delegate,
+    so both spellings produce bit-identical designs.
+
+    Config highlights — ``strategy`` ("da" solver / "latency" baseline);
+    ``jobs`` (CMVM solver parallelism: None = cpu_count, 1 = serial; any
+    value is bit-identical); ``cache`` (a :class:`SolutionCache` so
+    repeated compiles skip solved CMVMs entirely); ``solver`` (nested
+    :class:`SolverConfig`: dc, CSE engine, scoring knobs — compile
+    default dc=2).
     """
-    design = CompiledDesign(
-        in_quant=in_quant, in_shape=tuple(in_shape), use_pallas=use_pallas
+    legacy = {
+        name: val
+        for name, val in (
+            ("dc", dc),
+            ("strategy", strategy),
+            ("max_delay_per_stage", max_delay_per_stage),
+            ("use_pallas", use_pallas),
+            ("jobs", jobs),
+            ("cache", cache),
+            ("engine", engine),
+        )
+        if val is not UNSET
+    }
+    config = resolve_legacy(
+        "compile_model", config, legacy, CompileConfig, _config_from_legacy
     )
-    ctx = _Ctx(dc, strategy, max_delay_per_stage, use_pallas, design, engine)
+    return _compile_model(model, params, in_shape, in_quant, config)
+
+
+def _config_from_legacy(legacy: dict) -> CompileConfig:
+    def get(k):
+        return legacy.get(k, _LEGACY_COMPILE_DEFAULTS[k])
+
+    return CompileConfig(
+        strategy=get("strategy"),
+        max_delay_per_stage=get("max_delay_per_stage"),
+        use_pallas=get("use_pallas"),
+        jobs=get("jobs"),
+        cache=get("cache"),
+        solver=SolverConfig(dc=get("dc"), engine=get("engine")),
+    )
+
+
+def _compile_model(
+    model: Sequential,
+    params: list,
+    in_shape: tuple[int, ...],
+    in_quant: QuantConfig,
+    cfg: CompileConfig,
+) -> CompiledDesign:
+    """Config-consuming compiler core (all public paths delegate here)."""
+    if not isinstance(cfg, CompileConfig):
+        from ..flow.config import ConfigError
+
+        raise ConfigError(
+            f"compile_model: config must be a CompileConfig, got {type(cfg).__name__}"
+        )
+    design = CompiledDesign(
+        in_quant=in_quant, in_shape=tuple(in_shape), use_pallas=cfg.use_pallas,
+        # the design keeps the config *identity*, not the live cache
+        # handle (runtime-only; storing it would pin every cached entry
+        # for the design's lifetime — and load_design can't restore it)
+        config=cfg.replace(cache=None),
+    )
+    ctx = _Ctx(cfg, design)
     shape = tuple(in_shape)
     qints = [in_quant.qint] * int(np.prod(shape))
     # plan
     specs, shape, qints = _compile_seq(model, params, shape, qints, ctx)
     # solve
-    design.solver_stats = _solve_slots(ctx.slots, jobs, cache)
-    design.solver_stats["engine"] = engine
+    design.solver_stats = _solve_slots(ctx.slots, cfg.jobs, cfg.cache)
+    design.solver_stats["engine"] = cfg.solver.engine
     # stitch
     for slot, name, shape_str, n_bias, bias_bits in ctx.pending_reports:
         sol = slot.solution
@@ -513,17 +603,30 @@ def compile_model(
                 solver_time_s=sol.solver_time_s,
             )
         )
+    n_packs = 0
+    n_reused = 0
     for slot in ctx.slots:
         if slot.tables is None:
             slot.tables = compile_tables(slot.solution.program)
         design.tables.append(slot.tables)
-        try:
-            design.programs.append(slot.solution.program.to_arrays())
-        except OverflowError:
-            design.programs.append(None)  # not serializable: save_design rejects
+        # prefer the SolutionCache's already-packed arrays (set on both
+        # cache hits and puts) over a fresh to_arrays pack; warm-cache
+        # compiles therefore perform zero repacks (n_program_packs == 0)
+        parr = slot.solution.program_arrays
+        if parr is not None:
+            design.programs.append(parr)
+            n_reused += 1
+        else:
+            try:
+                design.programs.append(slot.solution.program.to_arrays())
+                n_packs += 1
+            except OverflowError:
+                design.programs.append(None)  # not serializable: save_design rejects
         slot.w_int = slot.qin = slot.solution = slot.key = None
+    design.solver_stats["n_program_packs"] = n_packs
+    design.solver_stats["n_program_arrays_reused"] = n_reused
     design.step_specs = specs
-    design.steps = build_steps(specs, design.tables, use_pallas)
+    design.steps = build_steps(specs, design.tables, cfg.use_pallas)
     design.out_shape = shape
     design.out_qints = qints
     return design

@@ -38,6 +38,7 @@ from typing import Union
 import numpy as np
 
 from ..core.dais import DAISProgram, qints_from_array, qints_to_array
+from ..flow.config import CompileConfig
 from ..kernels.adder_graph import compile_tables
 from ..nn.compiler import CompiledDesign, LayerReport, StepSpec, build_steps
 from ..nn.quant import QuantConfig
@@ -134,6 +135,15 @@ def save_design(design: CompiledDesign, path: Union[str, Path]) -> Path:
         "use_pallas": bool(design.use_pallas),
         "n_programs": len(design.programs),
         "steps": steps_json,
+        # the typed CompileConfig that produced the design: round-trips
+        # through load_design, and its content digest gives artifacts a
+        # config identity (same definition the SolutionCache keys use)
+        "compile_config": (
+            design.config.to_dict() if design.config is not None else None
+        ),
+        "compile_config_digest": (
+            design.config.digest() if design.config is not None else None
+        ),
         "reports": [asdict(r) for r in design.reports],
         "solver_stats": _sanitize(design.solver_stats),
         # rule4ml-style per-design resource summary for downstream tooling
@@ -202,6 +212,8 @@ def load_design(path: Union[str, Path]) -> CompiledDesign:
     specs = [spec_from(e) for e in manifest["steps"]]
     iq = manifest["in_quant"]
     use_pallas = bool(manifest.get("use_pallas", False))
+    cfg_dict = manifest.get("compile_config")
+    config = CompileConfig.from_dict(cfg_dict) if cfg_dict is not None else None
     design = CompiledDesign(
         in_quant=QuantConfig(iq["bits"], iq["int_bits"], iq["signed"]),
         in_shape=tuple(manifest["in_shape"]),
@@ -212,6 +224,7 @@ def load_design(path: Union[str, Path]) -> CompiledDesign:
         tables=tables,
         programs=programs,
         use_pallas=use_pallas,
+        config=config,
     )
     design.steps = build_steps(specs, tables, use_pallas)
     design.solver_stats = {

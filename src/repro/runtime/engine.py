@@ -33,9 +33,18 @@ from typing import Optional, Union
 import jax
 import numpy as np
 
+from ..flow.config import UNSET, ServeConfig, resolve_legacy
 from ..nn.compiler import CompiledDesign
 from .artifact import load_design
 from .metrics import LatencyRecorder
+
+
+def _serve_config_from_legacy(legacy: dict) -> ServeConfig:
+    if "overflow" in legacy:
+        legacy["backpressure"] = legacy.pop("overflow")
+    if legacy.get("buckets") is not None:
+        legacy["buckets"] = tuple(legacy["buckets"])
+    return ServeConfig(**legacy)
 
 
 class QueueFullError(RuntimeError):
@@ -198,31 +207,50 @@ class _ModelRunner(threading.Thread):
 class ServeEngine:
     """Multi-model registry + microbatched dispatch over compiled designs.
 
-    Parameters
-    ----------
-    max_batch : largest microbatch (and largest shape bucket).
-    queue_depth : per-model bounded queue size (backpressure limit).
-    max_wait_us : batching window after the first queued request.
-    buckets : explicit batch-shape buckets (default: powers of two).
-    overflow : "block" (submit waits for queue space) or "reject"
-        (submit raises :class:`QueueFullError` and counts the reject).
+    The canonical way to set knobs is ``config=``, a
+    :class:`repro.flow.ServeConfig` (max_batch, max_wait_us,
+    queue_depth, backpressure, buckets); this is what ``Flow.serve``
+    constructs.  The individual kwargs are a deprecated shim kept for
+    one release (``overflow`` maps to ``backpressure``): they construct
+    the equivalent config and delegate.
+
+    ``register`` rejects duplicate model names loudly — replacing a
+    model in place would silently mix two designs' results under one
+    name.  Rolling a model forward is a *versioning* operation:
+    ``repro.flow.Deployment.register(name, design, version=...)`` gives
+    register-v2 / atomic-alias-flip / drain-v1 semantics on top of this
+    engine.
     """
 
     def __init__(
         self,
-        max_batch: int = 256,
-        queue_depth: int = 8192,
-        max_wait_us: float = 200.0,
-        buckets: Optional[tuple[int, ...]] = None,
-        overflow: str = "block",
+        max_batch=UNSET,
+        queue_depth=UNSET,
+        max_wait_us=UNSET,
+        buckets=UNSET,
+        overflow=UNSET,
+        config: Optional[ServeConfig] = None,
     ):
-        if overflow not in ("block", "reject"):
-            raise ValueError("overflow must be 'block' or 'reject'")
-        self.max_batch = max_batch
-        self.queue_depth = queue_depth
-        self.max_wait_us = max_wait_us
-        self.buckets = buckets
-        self.overflow = overflow
+        legacy = {
+            name: val
+            for name, val in (
+                ("max_batch", max_batch),
+                ("queue_depth", queue_depth),
+                ("max_wait_us", max_wait_us),
+                ("buckets", buckets),
+                ("overflow", overflow),
+            )
+            if val is not UNSET
+        }
+        config = resolve_legacy(
+            "ServeEngine", config, legacy, ServeConfig, _serve_config_from_legacy
+        )
+        self.config = config
+        self.max_batch = config.max_batch
+        self.queue_depth = config.queue_depth
+        self.max_wait_us = config.max_wait_us
+        self.buckets = config.buckets
+        self.overflow = config.backpressure
         self._runners: dict[str, _ModelRunner] = {}
         self._lock = threading.Lock()
 
@@ -242,7 +270,12 @@ class ServeEngine:
         )
         with self._lock:
             if name in self._runners:
-                raise ValueError(f"model {name!r} already registered")
+                # never replace silently: two designs would be mixed under
+                # one name.  Version rollout lives in flow.Deployment.
+                raise ValueError(
+                    f"model {name!r} already registered (roll a new version "
+                    "via repro.flow.Deployment.register(..., version=))"
+                )
             self._runners[name] = runner
         try:
             if warmup:
@@ -254,10 +287,13 @@ class ServeEngine:
             raise
         return design
 
-    def unregister(self, name: str) -> None:
+    def unregister(self, name: str, timeout: float = 5.0) -> None:
+        """Drop a model after draining its queue (waiting up to
+        ``timeout`` seconds for the dispatcher to finish; requests still
+        queued after that are failed loudly, never left hanging)."""
         with self._lock:
             runner = self._runners.pop(name)
-        runner.stop()
+        runner.stop(timeout)
 
     def models(self) -> list[str]:
         with self._lock:
@@ -270,9 +306,7 @@ class ServeEngine:
             raise KeyError(f"model {name!r} is not registered") from None
 
     # -- serving -------------------------------------------------------
-    def submit(self, name: str, x: np.ndarray) -> Future:
-        """Enqueue one sample (integer grid, shape ``in_shape``)."""
-        runner = self._runner(name)
+    def _validate(self, name: str, runner: _ModelRunner, x: np.ndarray) -> np.ndarray:
         x = np.asarray(x)
         if x.shape != runner.in_shape:
             raise ValueError(
@@ -284,6 +318,12 @@ class ServeEngine:
                 f"model {name!r} expects integer-grid samples, got dtype "
                 f"{x.dtype} (quantize floats with the design's in_quant first)"
             )
+        return x
+
+    def submit(self, name: str, x: np.ndarray) -> Future:
+        """Enqueue one sample (integer grid, shape ``in_shape``)."""
+        runner = self._runner(name)
+        x = self._validate(name, runner, x)
         r = _Request(x, time.perf_counter(), Future())
         if self.overflow == "reject":
             try:
@@ -297,6 +337,42 @@ class ServeEngine:
         else:
             runner.q.put(r)
         return r.future
+
+    def submit_batch(self, name: str, xs) -> list[Future]:
+        """Enqueue many samples at once; returns one Future per sample.
+
+        Amortizes per-request overhead (registry lookup, validation,
+        clock read) across the batch — the high-throughput entrypoint
+        for clients that already hold several requests.  ``xs`` is an
+        iterable of samples or an ``[n, *in_shape]`` array.
+
+        Backpressure mirrors ``submit`` per sample, except that with the
+        "reject" policy an overflowing sample's Future is *failed* with
+        :class:`QueueFullError` (and counted) instead of raising, so one
+        full queue cannot lose the whole batch: every returned Future
+        resolves either to a result or to the rejection.
+        """
+        runner = self._runner(name)
+        xs = [self._validate(name, runner, x) for x in xs]
+        now = time.perf_counter()
+        reqs = [_Request(x, now, Future()) for x in xs]
+        reject = self.overflow == "reject"
+        for r in reqs:
+            if reject:
+                try:
+                    runner.q.put_nowait(r)
+                except queue.Full:
+                    runner.n_rejected += 1
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_exception(
+                            QueueFullError(
+                                f"queue for model {name!r} is full "
+                                f"({runner.q.maxsize} requests)"
+                            )
+                        )
+            else:
+                runner.q.put(r)
+        return [r.future for r in reqs]
 
     def infer(self, name: str, x: np.ndarray, timeout: Optional[float] = 30.0):
         """Synchronous single-sample convenience wrapper."""

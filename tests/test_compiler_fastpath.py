@@ -79,6 +79,31 @@ def test_cache_counters_in_solver_stats(jet):
     assert "cache_stats" not in plain.solver_stats
 
 
+def test_warm_cache_compile_skips_repack(jet):
+    """The SolutionCache's already-packed arrays are threaded straight
+    into ``design.programs``: a warm-cache compile performs **zero**
+    ``to_arrays`` repacks (and a cold compile with a cache reuses the
+    pack made for the cache entry)."""
+    model, params, in_shape, in_quant = jet
+    cache = SolutionCache()
+    cold = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    # cold path: the pack made by cache.put is reused, never redone
+    assert cold.solver_stats["n_program_packs"] == 0
+    assert cold.solver_stats["n_program_arrays_reused"] == len(cold.programs)
+    warm = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, cache=cache)
+    assert warm.solver_stats["n_cache_hits"] == len(warm.programs)
+    assert warm.solver_stats["n_program_packs"] == 0  # no unpack->repack round trip
+    assert warm.solver_stats["n_program_arrays_reused"] == len(warm.programs)
+    # packed arrays are the same content either way
+    for pa, pb in zip(cold.programs, warm.programs):
+        for k in pa:
+            np.testing.assert_array_equal(pa[k], pb[k])
+    # without a cache there is nothing to reuse: every program is packed
+    plain = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
+    assert plain.solver_stats["n_program_packs"] == len(plain.programs)
+    assert plain.solver_stats["n_program_arrays_reused"] == 0
+
+
 def test_solver_stats_populated(jet):
     model, params, in_shape, in_quant = jet
     design = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)

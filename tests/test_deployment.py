@@ -1,0 +1,150 @@
+"""Versioned rollout (`flow.Deployment`) and batched submit.
+
+Anchors
+-------
+* register v2 -> alias flips atomically, v1 drains (its queued /
+  in-flight futures complete with **v1's** results), new traffic lands
+  on v2;
+* `submit_batch` is bit-identical to per-request submit and fails
+  overflowing futures (reject policy) instead of losing the batch;
+* `ServeEngine.register` rejects duplicate names loudly (replacement is
+  a Deployment versioning operation, never silent).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.flow import CompileConfig, Deployment, Flow, ServeConfig
+from repro.nn import QDense, QuantConfig, init_params
+from repro.runtime import QueueFullError, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def two_designs():
+    """Two designs over the same in/out shapes with different weights."""
+    wq = QuantConfig(6, 2, signed=True)
+    iq = QuantConfig(8, 4, signed=True)
+    model = (QDense(4, wq),)
+    out = []
+    for seed in (1, 2):
+        params, _ = init_params(jax.random.PRNGKey(seed), model, (8,))
+        out.append(Flow.compile(model, params, (8,), iq, config=CompileConfig(jobs=1)))
+    return out
+
+
+def _samples(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.integers(-8, 8, size=(n, 8)), np.int32)
+
+
+def test_rollout_v1_drains_v2_serves(two_designs):
+    d1, d2 = two_designs
+    xs = _samples(24)
+    want1 = np.asarray(d1.forward_int(xs))
+    want2 = np.asarray(d2.forward_int(xs))
+    # long batching window: v1's requests sit queued while we roll v2
+    with Flow.serve(ServeConfig(max_batch=4, max_wait_us=300_000.0)) as dep:
+        assert dep.register("m", d1, warmup=True) == 1
+        inflight = [dep.submit("m", x) for x in xs]
+        assert dep.register("m", d2, warmup=True) == 2  # flip + drain v1
+        # every in-flight v1 future completed with v1's results
+        got1 = np.stack([f.result(30) for f in inflight])
+        np.testing.assert_array_equal(got1, want1)
+        # v1 is gone, alias serves v2
+        assert dep.versions("m") == [2]
+        assert dep.active_version("m") == 2
+        assert dep.engine.models() == ["m@v2"]
+        got2 = np.stack([f.result(30) for f in dep.submit_batch("m", xs)])
+        np.testing.assert_array_equal(got2, want2)
+        assert dep.stats("m")["version"] == 2
+
+
+def test_rollout_explicit_versions_and_rollback(two_designs):
+    d1, d2 = two_designs
+    x = _samples(1, seed=9)[0]
+    w1 = np.asarray(d1.forward_int(x[None]))[0]
+    w2 = np.asarray(d2.forward_int(x[None]))[0]
+    with Deployment(ServeConfig(max_batch=4, max_wait_us=100.0)) as dep:
+        dep.register("m", d1, version=10)
+        assert dep.active_version("m") == 10
+        dep.register("m", d2, version=20, drain=False)  # keep v10 alive
+        assert dep.versions("m") == [10, 20]
+        np.testing.assert_array_equal(dep.infer("m", x), w2)
+        dep.activate("m", 10)  # rollback
+        np.testing.assert_array_equal(dep.infer("m", x), w1)
+        with pytest.raises(ValueError, match="already registered"):
+            dep.register("m", d1, version=20)
+        with pytest.raises(KeyError, match="no live version"):
+            dep.activate("m", 99)
+        dep.unregister("m", 10)
+        with pytest.raises(KeyError, match="no active version"):
+            dep.infer("m", x)  # active version was dropped explicitly
+        dep.activate("m", 20)
+        np.testing.assert_array_equal(dep.infer("m", x), w2)
+
+
+def test_deployment_registry_isolation(two_designs):
+    d1, d2 = two_designs
+    x = _samples(1, seed=3)[0]
+    with Flow.serve(models={"a": d1, "b": d2}) as dep:
+        assert dep.models() == ["a", "b"]
+        assert dep.versions("a") == [1] and dep.versions("b") == [1]
+        np.testing.assert_array_equal(dep.infer("a", x), np.asarray(d1.forward_int(x[None]))[0])
+        np.testing.assert_array_equal(dep.infer("b", x), np.asarray(d2.forward_int(x[None]))[0])
+        dep.unregister("a")
+        assert dep.models() == ["b"]
+        with pytest.raises(KeyError, match="no active version"):
+            dep.submit("a", x)
+
+
+def test_submit_batch_bit_identical(two_designs):
+    d1, _ = two_designs
+    xs = _samples(50, seed=4)
+    want = np.asarray(d1.forward_int(xs))
+    with ServeEngine(config=ServeConfig(max_batch=16, max_wait_us=100.0)) as eng:
+        eng.register("m", d1, warmup=True)
+        futs = eng.submit_batch("m", xs)
+        assert len(futs) == 50
+        got = np.stack([f.result(30) for f in futs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_submit_batch_reject_fails_futures_not_batch(two_designs):
+    d1, _ = two_designs
+    cfg = ServeConfig(max_batch=4, queue_depth=4, max_wait_us=200_000.0, backpressure="reject")
+    eng = ServeEngine(config=cfg)
+    try:
+        eng.register("m", d1, warmup=True)
+        futs = eng.submit_batch("m", _samples(64, seed=5))
+        assert len(futs) == 64
+        ok = rejected = 0
+        for f in futs:
+            try:
+                assert f.result(30).shape == (4,)
+                ok += 1
+            except QueueFullError:
+                rejected += 1
+        assert rejected > 0 and ok > 0
+        assert eng.stats("m")["n_rejected"] == rejected
+    finally:
+        eng.shutdown()
+
+
+def test_engine_duplicate_register_is_loud(two_designs):
+    d1, d2 = two_designs
+    with ServeEngine(config=ServeConfig(max_batch=4)) as eng:
+        eng.register("m", d1)
+        with pytest.raises(ValueError, match="already registered"):
+            eng.register("m", d2)  # silent replacement would mix designs
+        assert eng.models() == ["m"]
+
+
+def test_engine_legacy_kwargs_warn_and_match_config():
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        eng = ServeEngine(max_batch=8, overflow="reject")
+    assert eng.config == ServeConfig(max_batch=8, backpressure="reject")
+    assert eng.overflow == "reject" and eng.max_batch == 8
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(max_batch=8, config=ServeConfig())

@@ -1,0 +1,285 @@
+"""The repro.flow API: typed configs and the legacy-shim equivalence.
+
+Anchors
+-------
+* configs validate, round-trip through to_dict/from_dict, and digest by
+  content (runtime-only fields excluded);
+* the legacy kwarg shims (`solve_cmvm(dc=...)`, `compile_model(dc=...)`)
+  and the config paths (`config=`, `Flow.compile`) produce **bit-
+  identical** DAIS programs and artifacts across strategy x engine;
+* mixing config= with legacy kwargs is a loud TypeError, and the legacy
+  path warns DeprecationWarning.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import QInterval, SolutionCache, config_solve_key, solve_cmvm
+from repro.flow import (
+    CompileConfig,
+    ConfigError,
+    Flow,
+    ServeConfig,
+    SolverConfig,
+)
+from repro.nn import QDense, QuantConfig, ReLU, compile_model, init_params
+from repro.runtime import load_design, save_design
+
+
+def _legacy(fn, *args, **kw):
+    """Call a deprecated-kwarg shim with its warning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+def _mat(d_in=8, d_out=8, seed=0):
+    return np.random.default_rng(seed).integers(-128, 128, size=(d_in, d_out))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (QDense(6, wq), ReLU(aq), QDense(4, wq))
+    params, _ = init_params(jax.random.PRNGKey(0), model, (8,))
+    return model, params, (8,), QuantConfig(8, 4, signed=True)
+
+
+# ----------------------------------------------------------------------
+# config objects
+# ----------------------------------------------------------------------
+def test_config_validation():
+    with pytest.raises(ConfigError, match="engine"):
+        SolverConfig(engine="quantum")
+    with pytest.raises(ConfigError, match="dc"):
+        SolverConfig(dc=-2)
+    with pytest.raises(ConfigError, match="strategy"):
+        CompileConfig(strategy="resource")
+    with pytest.raises(ConfigError, match="jobs"):
+        CompileConfig(jobs=0)
+    with pytest.raises(ConfigError, match="backpressure"):
+        ServeConfig(backpressure="drop")
+    with pytest.raises(ConfigError, match="bucket"):
+        ServeConfig(max_batch=16, buckets=(4,))
+
+
+def test_config_roundtrip_and_digest():
+    for cfg in (
+        SolverConfig(dc=3, engine="heap", depth_weight=0.5),
+        CompileConfig(strategy="latency", jobs=4, solver=SolverConfig(dc=0)),
+        ServeConfig(max_batch=8, buckets=(8, 2, 1), backpressure="reject"),
+    ):
+        d = cfg.to_dict()
+        back = type(cfg).from_dict(d)
+        assert back == cfg
+        assert back.digest() == cfg.digest()
+    with pytest.raises(ConfigError, match="unknown"):
+        SolverConfig.from_dict({"dc": 2, "warp": 9})
+
+
+def test_digest_is_content_identity():
+    assert SolverConfig(dc=2).digest() == SolverConfig(dc=2).digest()
+    assert SolverConfig(dc=2).digest() != SolverConfig(dc=3).digest()
+    assert SolverConfig().digest() != CompileConfig().digest()  # class-tagged
+    # runtime-only fields never change compile identity
+    base = CompileConfig()
+    assert base.digest() == CompileConfig(jobs=16).digest()
+    assert base.digest() == CompileConfig(cache=SolutionCache()).digest()
+    assert base.digest() != CompileConfig(max_delay_per_stage=3).digest()
+    # nested solver feeds the compile digest
+    assert base.digest() != CompileConfig(solver=SolverConfig(dc=3)).digest()
+
+
+def test_config_replace():
+    cfg = ServeConfig()
+    assert cfg.replace(max_batch=8).max_batch == 8
+    assert cfg.max_batch == 256  # frozen original untouched
+
+
+def test_cache_excluded_from_serialization():
+    cfg = CompileConfig(cache=SolutionCache(), jobs=2)
+    d = cfg.to_dict()
+    assert "cache" not in d and d["jobs"] == 2
+    assert CompileConfig.from_dict(d).cache is None
+
+
+def test_wrong_config_type_rejected(tiny):
+    from repro.runtime import ServeEngine
+
+    model, params, in_shape, in_quant = tiny
+    with pytest.raises(ConfigError, match="CompileConfig"):
+        Flow.compile(model, params, in_shape, in_quant, config=SolverConfig())
+    with pytest.raises(ConfigError, match="SolverConfig"):
+        solve_cmvm(_mat(), config=CompileConfig())
+    with pytest.raises(ConfigError, match="ServeConfig"):
+        ServeEngine(config=SolverConfig())
+
+
+def test_design_config_does_not_pin_live_cache(tiny):
+    """CompiledDesign keeps the config *identity*; the runtime-only
+    cache handle is stripped so the design never pins the LRU's packed
+    entries (and matches what load_design can reconstruct)."""
+    model, params, in_shape, in_quant = tiny
+    cache = SolutionCache()
+    design = Flow.compile(
+        model, params, in_shape, in_quant, config=CompileConfig(jobs=1, cache=cache)
+    )
+    assert design.config.cache is None
+    assert design.config.digest() == CompileConfig(jobs=1).digest()
+
+
+# ----------------------------------------------------------------------
+# shim <-> config equivalence
+# ----------------------------------------------------------------------
+def test_solve_cmvm_shim_warns_and_matches():
+    m = _mat()
+    with pytest.warns(DeprecationWarning, match="SolverConfig"):
+        legacy = solve_cmvm(m, dc=2, engine="batch")
+    cfg = solve_cmvm(m, config=SolverConfig(dc=2))
+    a, b = legacy.program.to_arrays(), cfg.program.to_arrays()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_solve_cmvm_rejects_mixed_spelling():
+    with pytest.raises(TypeError, match="not both"):
+        solve_cmvm(_mat(), dc=2, config=SolverConfig())
+
+
+def test_compile_model_rejects_mixed_spelling(tiny):
+    model, params, in_shape, in_quant = tiny
+    with pytest.raises(TypeError, match="not both"):
+        compile_model(model, params, in_shape, in_quant, dc=2, config=CompileConfig())
+
+
+@pytest.mark.parametrize("strategy", ["da", "latency"])
+@pytest.mark.parametrize("engine", ["batch", "heap"])
+def test_flow_compile_bit_identical_to_legacy_kwargs(tiny, strategy, engine):
+    """The acceptance grid: old kwargs vs Flow.compile(config=) produce
+    bit-identical DAIS programs, steps, reports, and artifacts."""
+    model, params, in_shape, in_quant = tiny
+    legacy = _legacy(
+        compile_model, model, params, in_shape, in_quant,
+        dc=2, strategy=strategy, engine=engine, jobs=1,
+    )
+    cfg = CompileConfig(
+        strategy=strategy, jobs=1, solver=SolverConfig(dc=2, engine=engine)
+    )
+    flow = Flow.compile(model, params, in_shape, in_quant, config=cfg)
+
+    # identical packed programs
+    assert len(legacy.programs) == len(flow.programs)
+    for pa, pb in zip(legacy.programs, flow.programs):
+        assert (pa is None) == (pb is None)
+        for k in pa or ():
+            np.testing.assert_array_equal(pa[k], pb[k])
+    # identical step topology
+    assert [s.kind for s in legacy.step_specs] == [s.kind for s in flow.step_specs]
+    # identical execution + reports
+    rng = np.random.default_rng(1)
+    q = in_quant.qint
+    x = rng.integers(q.lo, q.hi + 1, size=(32, *in_shape)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(legacy.forward_int(x)), np.asarray(flow.forward_int(x))
+    )
+    # identical reports up to solver wall time
+    from dataclasses import asdict
+
+    def _rep(reports):
+        out = []
+        for r in reports:
+            d = asdict(r)
+            d.pop("solver_time_s")
+            out.append(d)
+        return out
+
+    assert _rep(legacy.reports) == _rep(flow.reports)
+    # both paths carry the same config identity
+    assert legacy.config.digest() == flow.config.digest()
+
+
+def test_artifacts_identical_through_both_paths(tiny, tmp_path):
+    model, params, in_shape, in_quant = tiny
+    legacy = _legacy(compile_model, model, params, in_shape, in_quant, dc=2, jobs=1)
+    flow = Flow.compile(model, params, in_shape, in_quant, config=CompileConfig(jobs=1))
+    import json
+
+    save_design(legacy, tmp_path / "legacy")
+    flow.save(tmp_path / "flow")
+    ma = json.loads((tmp_path / "legacy" / "manifest.json").read_text())
+    mb = json.loads((tmp_path / "flow" / "manifest.json").read_text())
+    # identical design bytes and identical embedded config
+    assert ma["arrays_sha256"] == mb["arrays_sha256"]
+    assert ma["compile_config"] == mb["compile_config"]
+    assert ma["compile_config_digest"] == mb["compile_config_digest"]
+
+
+def test_config_roundtrips_through_artifact(tiny, tmp_path):
+    model, params, in_shape, in_quant = tiny
+    cfg = CompileConfig(jobs=1, solver=SolverConfig(dc=1, engine="heap"))
+    design = Flow.compile(model, params, in_shape, in_quant, config=cfg)
+    design.save(tmp_path / "d")
+    loaded = Flow.load(tmp_path / "d")
+    assert loaded.config == CompileConfig.from_dict(cfg.to_dict())
+    assert loaded.config.digest() == cfg.digest()
+    # Design.load classmethod is the same loader
+    from repro.flow import Design
+
+    again = Design.load(tmp_path / "d")
+    x = np.zeros((2, *in_shape), np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.forward_int(x)), np.asarray(again.forward_int(x))
+    )
+
+
+def test_pre_config_artifacts_still_load(tiny, tmp_path):
+    """Manifests written before the config era (no compile_config key)
+    must keep loading — config comes back as None."""
+    import json
+
+    model, params, in_shape, in_quant = tiny
+    design = Flow.compile(model, params, in_shape, in_quant, config=CompileConfig(jobs=1))
+    path = design.save(tmp_path / "d")
+    mpath = path / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    del manifest["compile_config"], manifest["compile_config_digest"]
+    mpath.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    loaded = load_design(path)
+    assert loaded.config is None
+    x = np.zeros((2, *in_shape), np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.forward_int(x)), np.asarray(design.forward_int(x))
+    )
+
+
+# ----------------------------------------------------------------------
+# config-digest cache keys
+# ----------------------------------------------------------------------
+def test_cache_keys_shared_between_solver_and_compiler_paths(tiny):
+    """solve_cmvm(config=, cache=) and compile_model(config=, cache=)
+    must hit the same SolutionCache entries: both derive keys from the
+    SolverConfig digest (config identity, not ad-hoc kwarg tuples)."""
+    m = _mat(6, 5, seed=3)
+    cache = SolutionCache()
+    scfg = SolverConfig(dc=2)
+    solve_cmvm(m, config=scfg, cache=cache)
+    assert cache.stats.puts == 1
+    qin8 = [QInterval.from_fixed(True, 8, 8)] * 6
+    key = config_solve_key(m, qin8, [0] * 6, scfg)
+    assert cache.get(key) is not None  # the solver's internal key == config_solve_key
+
+
+def test_solver_digest_partitions_cache():
+    m = _mat(6, 5, seed=4)
+    cache = SolutionCache()
+    a = solve_cmvm(m, config=SolverConfig(dc=2), cache=cache)
+    b = solve_cmvm(m, config=SolverConfig(dc=-1), cache=cache)  # different digest
+    assert cache.stats.misses == 2 and cache.stats.puts == 2
+    assert not a.stats.get("cache_hit") and not b.stats.get("cache_hit")
+    hot = solve_cmvm(m, config=SolverConfig(dc=2), cache=cache)
+    assert hot.stats.get("cache_hit")

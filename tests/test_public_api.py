@@ -1,0 +1,103 @@
+"""Public-API surface snapshot.
+
+The exported names and callable signatures of the four public packages
+(``repro.flow``, ``repro.core``, ``repro.nn``, ``repro.runtime``) are
+pinned in ``tests/public_api_snapshot.json``.  Any drift — a renamed
+export, a changed default, a dropped method — fails this test, so
+surface changes are always explicit diffs of the checked-in snapshot.
+
+Regenerate intentionally with:
+
+    PYTHONPATH=src python tests/test_public_api.py --regen
+
+CI runs this module as its own ruff-adjacent job (``api-surface``).
+"""
+
+import importlib
+import inspect
+import json
+import sys
+from pathlib import Path
+
+MODULES = ("repro.flow", "repro.core", "repro.nn", "repro.runtime")
+SNAPSHOT = Path(__file__).parent / "public_api_snapshot.json"
+
+
+# builtin members (object / BaseException) vary across Python minors
+# (e.g. add_note arrived in 3.11) — keep them out of the snapshot
+_BUILTIN_MEMBERS = set(dir(object)) | set(dir(BaseException))
+
+
+def _describe(obj) -> dict:
+    if inspect.ismodule(obj):
+        return {"kind": "module"}
+    if inspect.isclass(obj):
+        try:
+            sig = str(inspect.signature(obj))
+        except (ValueError, TypeError):
+            sig = None
+        return {
+            "kind": "class",
+            "signature": sig,
+            "members": sorted(
+                n
+                for n in dir(obj)
+                if not n.startswith("_") and n not in _BUILTIN_MEMBERS
+            ),
+        }
+    if callable(obj):
+        try:
+            sig = str(inspect.signature(obj))
+        except (ValueError, TypeError):
+            sig = None
+        return {"kind": "function", "signature": sig}
+    return {"kind": "value", "type": type(obj).__name__}
+
+
+def build_surface() -> dict:
+    surface: dict = {}
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        exported = getattr(mod, "__all__")
+        surface[modname] = {name: _describe(getattr(mod, name)) for name in exported}
+    return surface
+
+
+def _flatten(surface: dict) -> dict:
+    out = {}
+    for modname, names in surface.items():
+        for name, desc in names.items():
+            out[f"{modname}.{name}"] = desc
+    return out
+
+
+def test_public_api_matches_snapshot():
+    assert SNAPSHOT.exists(), (
+        f"{SNAPSHOT} missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_public_api.py --regen`"
+    )
+    want = _flatten(json.loads(SNAPSHOT.read_text()))
+    got = _flatten(build_surface())
+    problems = []
+    for key in sorted(set(want) - set(got)):
+        problems.append(f"removed export: {key}")
+    for key in sorted(set(got) - set(want)):
+        problems.append(f"new unpinned export: {key}")
+    for key in sorted(set(want) & set(got)):
+        if want[key] != got[key]:
+            problems.append(
+                f"changed: {key}\n  pinned:  {want[key]}\n  current: {got[key]}"
+            )
+    assert not problems, (
+        "public API drifted from tests/public_api_snapshot.json "
+        "(regenerate intentionally with `PYTHONPATH=src python "
+        "tests/test_public_api.py --regen`):\n" + "\n".join(problems)
+    )
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        SNAPSHOT.write_text(json.dumps(build_surface(), indent=2, sort_keys=True) + "\n")
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(json.dumps(build_surface(), indent=2, sort_keys=True))
