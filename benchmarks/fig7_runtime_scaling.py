@@ -44,6 +44,7 @@ def run(sizes=(8, 16, 32, 64), bw=8, seed=0, budget_s=600.0, cache=None,
 
 def main(csv=True):
     rows = run(cache=SolutionCache())
+    arena_rows = run(engine="arena")
     if len(rows) >= 3:
         logn = np.log([r["N"] for r in rows])
         logt = np.log([r["seconds"] for r in rows])
@@ -52,11 +53,20 @@ def main(csv=True):
         slope = float("nan")
     if csv:
         print("name,us_per_call,derived")
+        # pair by size, not position: either run may truncate at its
+        # time budget, and a positional zip would mispair the survivors
+        arena_by_m = {r["m"]: r for r in arena_rows}
         for r in rows:
             print(
                 f"fig7_m{r['m']},{r['seconds']*1e6:.0f},"
                 f"N={r['N']};adders={r['adders']}"
             )
+            ra = arena_by_m.get(r["m"])
+            if ra is not None:
+                print(
+                    f"fig7_m{r['m']}_arena,{ra['seconds']*1e6:.0f},"
+                    f"speedup_vs_batch={r['seconds']/max(ra['seconds'],1e-9):.2f}x"
+                )
             if "cached_seconds" in r:
                 speedup = r["seconds"] / max(r["cached_seconds"], 1e-9)
                 print(

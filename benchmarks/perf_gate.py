@@ -1,0 +1,153 @@
+"""Perf-trajectory gate: compare a fresh ``solver_smoke`` JSON against
+the committed baseline (``BENCH_solver.json`` at the repo root).
+
+Two classes of check:
+
+  * **deterministic** — adder and cost-bit counts per (size, engine)
+    must match the baseline exactly.  The solver is a pure function of
+    its inputs, so any drift here is an algorithmic change and fails
+    regardless of tolerances.
+  * **timing** — per (size, engine) solve time must stay within
+    ``(1 + tolerance)`` of the baseline (default 20%, the regression
+    budget from the PR 5 issue), except under ``floor_s`` where
+    shared-runner noise dominates signal.  CPU seconds
+    (``cpu_seconds``, steal-immune) are compared when both sides carry
+    them, wall seconds otherwise.  Machines still differ; the committed
+    baseline records the dev container, so CI passes a wider
+    ``--floor-s`` and relies on the deterministic checks plus its own
+    archived artifact series for cross-push trends.
+
+Usage::
+
+    python -m benchmarks.perf_gate --fresh solver-smoke.json \
+        [--baseline BENCH_solver.json] [--tolerance 0.2] [--floor-s 2.0]
+
+Exit code 1 on any violation; prints one line per comparison.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _index(result: dict) -> dict:
+    """(m, engine) -> {seconds, adders, cost_bits} from a smoke JSON."""
+    out = {}
+    for row in result.get("sizes", []):
+        for engine, e in row.get("engines", {}).items():
+            out[(int(row["m"]), engine)] = e
+    return out
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float = 0.2,
+            floor_s: float = 1.0,
+            ratio_tolerance: float | None = None) -> list[str]:
+    """Return a list of violation messages (empty = gate passes)."""
+    violations: list[str] = []
+    fi, bi = _index(fresh), _index(baseline)
+    missing = sorted(set(bi) - set(fi))
+    if missing:
+        violations.append(f"fresh run lacks baseline points: {missing}")
+    for key in sorted(set(fi) & set(bi)):
+        m, engine = key
+        f, b = fi[key], bi[key]
+        for metric in ("adders", "cost_bits"):
+            if f[metric] != b[metric]:
+                violations.append(
+                    f"m{m}/{engine}: {metric} {f[metric]} != baseline "
+                    f"{b[metric]} (deterministic drift)"
+                )
+        tkey = "cpu_seconds" if "cpu_seconds" in f and "cpu_seconds" in b else "seconds"
+        limit = max(b[tkey] * (1.0 + tolerance), floor_s)
+        status = "ok" if f[tkey] <= limit else "REGRESSION"
+        print(
+            f"m{m}/{engine}: {f[tkey]:.3f}s ({tkey}) vs baseline "
+            f"{b[tkey]:.3f}s (limit {limit:.3f}s) {status}"
+        )
+        if f[tkey] > limit:
+            violations.append(
+                f"m{m}/{engine}: {f[tkey]:.3f}s exceeds "
+                f"{limit:.3f}s (> {tolerance:.0%} over baseline)"
+            )
+    if ratio_tolerance is None:
+        # the two engines are timed in different windows, so contention
+        # asymmetry adds noise the absolute checks don't see: default to
+        # a flat 20 points on top of the absolute tolerance
+        ratio_tolerance = tolerance + 0.2
+    violations += _ratio_check(fresh, baseline, fi, bi, ratio_tolerance)
+    return violations
+
+
+def _ratio_check(fresh: dict, baseline: dict, fi: dict, bi: dict,
+                 ratio_tolerance: float) -> list[str]:
+    """Machine-independent check: the gate engine's time *relative to
+    the batch engine in the same run* must not regress.  Absolute CPU
+    seconds shift with the machine class; this ratio cancels machine
+    speed, so it keeps its teeth on shared runners where the absolute
+    limits are floored or widened away."""
+    m = fresh.get("gate_size", baseline.get("gate_size"))
+    eng = fresh.get("gate_engine", baseline.get("gate_engine"))
+    out: list[str] = []
+    try:
+        tkey = "cpu_seconds" if "cpu_seconds" in fi[(m, eng)] else "seconds"
+        f_ratio = fi[(m, eng)][tkey] / fi[(m, "batch")][tkey]
+        b_ratio = bi[(m, eng)][tkey] / bi[(m, "batch")][tkey]
+    except (KeyError, ZeroDivisionError):
+        return out
+    limit = b_ratio * (1.0 + ratio_tolerance)
+    status = "ok" if f_ratio <= limit else "REGRESSION"
+    print(
+        f"m{m} {eng}/batch ratio: {f_ratio:.3f} vs baseline "
+        f"{b_ratio:.3f} (limit {limit:.3f}) {status}"
+    )
+    if f_ratio > limit:
+        out.append(
+            f"m{m}: {eng}-vs-batch ratio {f_ratio:.3f} exceeds "
+            f"{limit:.3f} (machine-independent regression)"
+        )
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True, help="fresh solver_smoke JSON")
+    ap.add_argument(
+        "--baseline", default=str(REPO_ROOT / "BENCH_solver.json"),
+        help="committed baseline JSON (default: repo-root BENCH_solver.json)",
+    )
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative slowdown (default 0.2 = 20%%)")
+    ap.add_argument("--floor-s", type=float, default=1.0,
+                    help="never fail a point whose time is under this many "
+                         "seconds (noise floor; default 1.0 suits the "
+                         "baseline machine)")
+    ap.add_argument("--ratio-tolerance", type=float, default=None,
+                    help="allowed slowdown of the gate-engine-vs-batch "
+                         "same-run ratio (machine-independent; default "
+                         "tolerance + 0.2)")
+    args = ap.parse_args(argv)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        print(f"no baseline at {baseline_path}: nothing to gate against")
+        return 0
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    violations = compare(
+        fresh, baseline, args.tolerance, args.floor_s, args.ratio_tolerance
+    )
+    for v in violations:
+        print(f"FAIL: {v}", file=sys.stderr)
+    if not violations:
+        print("perf gate passed")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

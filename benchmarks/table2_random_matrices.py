@@ -9,7 +9,6 @@ are embedded for a side-by-side delta.
 from __future__ import annotations
 
 import concurrent.futures
-import multiprocessing
 import time
 
 import numpy as np
@@ -84,13 +83,10 @@ def solve_wall(m=16, dc=2, n_mats=8, bw=8, seed=1, jobs=1, cache=None,
     if cache is not None:
         sols = [solve_cmvm(p[0], config=cfg, cache=cache) for p in payloads]
     elif jobs > 1:
-        try:
-            with concurrent.futures.ProcessPoolExecutor(
-                jobs, mp_context=multiprocessing.get_context("fork")
-            ) as ex:
-                sols = list(ex.map(solve_task, payloads))
-        except Exception:
-            sols = [solve_task(p) for p in payloads]
+        # same GIL-releasing thread pool as compile_model's solve phase
+        # (no fork/spawn startup, no payload pickling)
+        with concurrent.futures.ThreadPoolExecutor(jobs) as ex:
+            sols = list(ex.map(solve_task, payloads))
     else:
         sols = [solve_task(p) for p in payloads]
     wall = time.perf_counter() - t0
@@ -117,6 +113,7 @@ def main(csv=True):
         jobs = min(os.cpu_count() or 1, 4)
         t_serial = solve_wall(jobs=1)
         t_par = solve_wall(jobs=jobs)
+        t_arena = solve_wall(jobs=1, engine="arena")
         cache = SolutionCache()
         solve_wall(cache=cache)  # populate
         t_cached = solve_wall(cache=cache)
@@ -124,6 +121,10 @@ def main(csv=True):
         print(
             f"table2_solve_wall_jobs{jobs},{t_par*1e6:.0f},"
             f"speedup={t_serial/max(t_par,1e-9):.2f}x"
+        )
+        print(
+            f"table2_solve_wall_arena,{t_arena*1e6:.0f},"
+            f"speedup={t_serial/max(t_arena,1e-9):.2f}x"
         )
         print(
             f"table2_solve_wall_cached,{t_cached*1e6:.0f},"

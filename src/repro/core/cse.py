@@ -40,7 +40,7 @@ implementation fails (all occurrences depth-rejected, or fewer than two
 disjoint occurrences survive) goes *dormant* and is reconsidered only
 when its count next increases.
 
-Two interchangeable engines realise this rule
+Three interchangeable engines realise this rule
 (``engine="batch"`` is the default; see docs/solver_performance.md):
 
   * ``engine="heap"`` — exact lazy max-heap of ``(-priority, key)``
@@ -59,6 +59,18 @@ Two interchangeable engines realise this rule
     deferred *rest* tier summarised by one stale upper bound; only when
     the running best decays to that bound is the tier re-scored (one
     vectorized sweep) and re-partitioned.
+  * ``engine="arena"`` — the batch selection rule over a fully
+    array-resident core (:class:`CSEArena`): column digit stores are
+    bump-allocated windows over flat reusable buffers carrying packed
+    ``row << 16 | pos`` tokens, the pair-count table (with per-key
+    dormancy bytes) lives in preallocated open-addressed arrays, and the
+    per-step replace/count-delta pass is fused — pair keys are computed
+    straight from (token, digit) windows and scattered into the count
+    table with one ``np.add.at`` instead of the batch engine's
+    sort + ``reduceat`` dedup.  Buffers persist (per thread, see
+    :func:`get_thread_arena`) so repeated solves run allocation-quiet.
+    Selection semantics are shared with ``batch`` verbatim, so programs
+    are bit-identical across all three engines.
 
 Performance notes (the solver fast path; see docs/solver_performance.md):
 
@@ -87,6 +99,8 @@ Performance notes (the solver fast path; see docs/solver_performance.md):
 from __future__ import annotations
 
 import heapq
+import threading
+import weakref
 from dataclasses import dataclass
 from typing import Optional
 
@@ -110,6 +124,14 @@ from .dais import DAISProgram, Term
 _ROW_BITS = 21
 _ROW_MASK = (1 << _ROW_BITS) - 1
 _S_OFF = 1 << 14
+
+# Digit tokens: row << _TOK_BITS | pos packs one digit slot into an int64
+# whose natural order IS the (row, pos) lexicographic order the canonical
+# key needs — the arena engine's pair builder swaps with min/max instead
+# of the 4-way compare of _canon_pack.  Positions are CSD digit indices
+# (< csd_span <= 66), far below the 2^16 field.
+_TOK_BITS = 16
+_TOK_MASK = (1 << _TOK_BITS) - 1
 
 # batch engine: size of the active candidate tier (the rest is deferred
 # behind a single stale upper bound).  1024 won the sweep in
@@ -141,6 +163,20 @@ def _canon_pack(rA, pA, dA, rB, pB, dB):
     return _pack_keys(r1, r2, p2 - p1, dA * dB)
 
 
+def _pack_pair_keys(tA, dA, tB, dB):
+    """Canonical packed keys for digit pairs given (token, digit) arrays.
+
+    Bit-for-bit identical to :func:`_canon_pack` on the unpacked
+    components: token order equals (row, pos) lexicographic order, so the
+    canonical swap is one ``minimum``/``maximum`` pair, and the sign bit
+    is ``(dA * dB + 1) >> 1`` (digits are +-1)."""
+    mn = np.minimum(tA, tB)
+    mx = np.maximum(tA, tB)
+    key = ((mn >> _TOK_BITS) << _ROW_BITS) | (mx >> _TOK_BITS)
+    key = (key << 16) | ((mx & _TOK_MASK) - (mn & _TOK_MASK) + _S_OFF)
+    return (key << 1) | ((dA * dB + 1) >> 1)
+
+
 _HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
 
 
@@ -164,7 +200,9 @@ class _CountTable:
         self.n = 0
 
     def _slots_claim(self, k: np.ndarray) -> np.ndarray:
-        """Slot per key (existing or newly claimed); keys must be unique."""
+        """Slot per key (existing or newly claimed); keys must be unique.
+        (The arena engine's duplicate-bearing per-step stream goes
+        through :meth:`_ArenaCountTable.scatter_add` instead.)"""
         mask = self.mask
         idx = ((k.astype(np.uint64) * _HASH_MULT) >> self.shift).astype(np.int64)
         out = np.empty(k.shape[0], dtype=np.int64)
@@ -239,6 +277,292 @@ class _CountTable:
         self.n = 0
         slots = self._slots_claim(lk)
         self.vals[slots] = lv
+
+
+class CSEArena:
+    """Reusable numpy workspace for ``engine="arena"`` CSE solves.
+
+    Every long-lived mutable buffer of one arena-engine run lives here:
+    the open-addressed pair-count table (plus per-key dormancy bytes),
+    the candidate-tier arrays, the flat column-store buffers (handed out
+    as bump-allocated windows), and the per-step scratch vectors.
+    Buffers only ever grow — ``n_reallocs`` counts growth events — so a
+    second solve of the same shape reports zero new reallocations and
+    the hot loop runs entirely inside memory allocated by the first.
+
+    One arena serves one CSE run at a time; ``CSE`` falls back to a
+    fresh private arena when the thread's arena is busy.  Use
+    :func:`get_thread_arena` for the per-thread instance that
+    ``CSE(engine="arena")`` picks up automatically — per-thread reuse is
+    what keeps the compiler's thread-pool solves allocation-quiet
+    across layers.  Not thread-safe; never share one arena between
+    threads.
+    """
+
+    __slots__ = (
+        "scratch", "tab_keys", "tab_vals", "tab_dorm", "col_bufs",
+        "col_cap", "col_top", "n_reallocs", "n_solves", "busy",
+        "_col_demand", "_col_demand_hw", "_owner",
+    )
+
+    _COL_FIELDS = ("rows", "poss", "digs", "toks")
+
+    def __init__(self) -> None:
+        self.scratch: dict[str, np.ndarray] = {}
+        self.tab_keys: Optional[np.ndarray] = None
+        self.tab_vals: Optional[np.ndarray] = None
+        self.tab_dorm: Optional[np.ndarray] = None
+        self.col_bufs: dict[str, np.ndarray] = {}
+        self.col_cap = 0
+        self.col_top = 0
+        self.n_reallocs = 0
+        self.n_solves = 0
+        self.busy = False
+        self._col_demand = 0
+        self._col_demand_hw = 0
+        self._owner: Optional[weakref.ref] = None
+
+    # -- lifecycle -----------------------------------------------------
+    def acquire(self, owner=None) -> bool:
+        """Claim the arena for one CSE run; False when already in use.
+
+        The owner is held by weakref: if a previous owner died without
+        releasing (e.g. its ``__init__`` raised after acquiring), the
+        arena is reclaimed here instead of staying busy forever."""
+        if self.busy and not (
+            self._owner is not None and self._owner() is None
+        ):
+            return False
+        self.busy = True
+        self._owner = weakref.ref(owner) if owner is not None else None
+        self.n_solves += 1
+        self.col_top = 0
+        self._col_demand = 0
+        return True
+
+    def release(self) -> None:
+        # grow the column arena to this run's high-water NOW (not at the
+        # next acquire), so the realloc is charged to the run that
+        # discovered the demand and a repeat solve starts preallocated
+        self._col_demand_hw = max(self._col_demand_hw, self._col_demand)
+        if self.col_cap < self._col_demand_hw:
+            self._grow_cols(self._col_demand_hw)
+        self.busy = False
+        self._owner = None
+
+    # -- named scratch vectors ----------------------------------------
+    def take(self, name: str, n: int, dtype=np.int64) -> np.ndarray:
+        """A named scratch buffer of capacity >= n (slice ``[:n]``)."""
+        buf = self.scratch.get(name)
+        if buf is None or buf.shape[0] < n or buf.dtype != dtype:
+            cap = 256
+            while cap < n:
+                cap <<= 1
+            self.scratch[name] = buf = np.empty(cap, dtype=dtype)
+            self.n_reallocs += 1
+        return buf
+
+    # -- column-store bump allocator ----------------------------------
+    def col_alloc(self, cap: int) -> dict[str, np.ndarray]:
+        """One column window (rows/poss/digs/toks) of capacity ``cap``."""
+        self._col_demand += cap
+        if self.col_top + cap > self.col_cap:
+            self._grow_cols(max(2 * self.col_cap, self.col_top + cap))
+        k = self.col_top
+        self.col_top = k + cap
+        return {f: self.col_bufs[f][k : k + cap] for f in self._COL_FIELDS}
+
+    def _grow_cols(self, need: int) -> None:
+        cap = 1 << 12
+        while cap < need:
+            cap <<= 1
+        # live windows keep referencing the orphaned buffers (their views
+        # hold the old base arrays alive); only new windows land here
+        self.col_bufs = {f: np.empty(cap, dtype=np.int64) for f in self._COL_FIELDS}
+        self.col_cap = cap
+        self.col_top = 0
+        self.n_reallocs += 1
+
+
+_ARENA_TLS = threading.local()
+
+
+def get_thread_arena() -> CSEArena:
+    """The calling thread's shared :class:`CSEArena` (created on first
+    use).  ``CSE(engine="arena")`` picks this up when no explicit arena
+    is passed, so consecutive solves on one thread — including each of
+    the compiler's thread-pool workers — reuse warm buffers."""
+    ar = getattr(_ARENA_TLS, "arena", None)
+    if ar is None:
+        ar = _ARENA_TLS.arena = CSEArena()
+    return ar
+
+
+class _ArenaCountTable(_CountTable):
+    """Arena-resident :class:`_CountTable` with per-key dormancy flags.
+
+    The key/value/dormancy arrays live in (and are reused from) a
+    :class:`CSEArena`; ``reset`` re-claims them for a new run and
+    ``_grow`` re-homes them, each charging the arena a reallocation only
+    on a genuine capacity increase.  Dormancy is a parallel byte per
+    slot, so the selection loop tests a whole candidate batch with one
+    vectorized probe instead of Python set membership."""
+
+    __slots__ = ("arena", "dorm")
+
+    def __init__(self, arena: CSEArena) -> None:
+        self.arena = arena
+        self.mask = 0
+        self.shift = np.uint64(0)
+        self.keys = None
+        self.vals = None
+        self.dorm = None
+        self.n = 0
+
+    def reset(self, n_expected: int) -> None:
+        """Clear and size for ~n_expected initial keys, kept under 1/10
+        load: a CSE run roughly triples its key population (every minted
+        row spawns fresh pair keys) and occupancy may overcount duplicate
+        claims, so the generous factor is what keeps the hot loop free of
+        mid-run rehashes.  Reuses the arena's buffers whenever they are
+        already big enough."""
+        cap = 1 << 16
+        while n_expected * 10 > cap:
+            cap <<= 1
+        self._rehome(cap)
+
+    def _rehome(self, cap: int) -> None:
+        """Point this table at a cleared ``cap``-entry slice of the
+        arena's buffers, (re)allocating them only on a genuine capacity
+        increase.  Slice, don't adopt, an oversized buffer: a small run
+        (e.g. the stage-2 CSE after a big stage 1) then only wipes what
+        it uses."""
+        ar = self.arena
+        if ar.tab_keys is None or ar.tab_keys.shape[0] < cap:
+            ar.tab_keys = np.empty(cap, dtype=np.int64)
+            ar.tab_vals = np.empty(cap, dtype=np.int64)
+            ar.tab_dorm = np.empty(cap, dtype=np.int8)
+            ar.n_reallocs += 1
+        self.keys = ar.tab_keys[:cap]
+        self.vals = ar.tab_vals[:cap]
+        self.dorm = ar.tab_dorm[:cap]
+        self.keys.fill(-1)
+        self.vals.fill(0)
+        self.dorm.fill(0)
+        self.mask = cap - 1
+        self.shift = np.uint64(64 - (cap.bit_length() - 1))
+        self.n = 0
+
+    def reserve(self, k: int) -> None:
+        """Ensure ``k`` further (possibly new) keys fit under 50% load."""
+        while (self.n + k) * 2 > self.mask + 1:
+            self._grow()
+
+    def _grow(self) -> None:
+        live = self.keys != -1
+        lk, lv, ld = self.keys[live], self.vals[live], self.dorm[live]
+        cap = (self.mask + 1) * 2
+        while self.n * 4 > cap:
+            cap *= 2
+        self._rehome(cap)
+        slots = self._slots_claim(lk)
+        self.vals[slots] = lv
+        self.dorm[slots] = ld
+
+    def scatter_add(self, k: np.ndarray, delta: np.ndarray):
+        """Fused claim + scatter for a (possibly duplicated) key batch:
+        returns ``(slots, before, after)`` where ``before``/``after`` are
+        each key's count on either side of one ``np.add.at``.  The first
+        probe round runs without index indirection (it touches every
+        key); later rounds only handle the collision tail.  Occupancy may
+        overcount duplicate new keys — it only drives the growth
+        heuristic, which the 50% reserve threshold absorbs."""
+        self.reserve(k.shape[0])
+        mask = self.mask
+        keys = self.keys
+        idx = ((k.view(np.uint64) * _HASH_MULT) >> self.shift).view(np.int64)
+        cur = keys[idx]
+        hit = cur == k
+        if not hit.all():
+            empty = cur == -1
+            if empty.any():
+                e = np.flatnonzero(empty)
+                keys[idx[e]] = k[e]  # duplicate slots: last write wins
+                won = keys[idx[e]] == k[e]
+                # exact occupancy (duplicate winners share a slot): the
+                # unique() runs only over this step's new keys, and keeps
+                # `n` honest so the 1/10 reset sizing never rehashes
+                self.n += int(np.unique(idx[e][won]).size)
+                hit[e] = won
+            pending = np.flatnonzero(~hit)
+            while pending.size:
+                slots = (idx[pending] + 1) & mask
+                idx[pending] = slots
+                cur = keys[slots]
+                hitp = cur == k[pending]
+                empty = cur == -1
+                if empty.any():
+                    e = pending[empty]
+                    keys[idx[e]] = k[e]
+                    won = keys[idx[e]] == k[e]
+                    self.n += int(np.unique(idx[e][won]).size)
+                    hitp = hitp.copy()
+                    hitp[empty] = won
+                pending = pending[~hitp]
+        vals = self.vals
+        before = vals[idx]
+        np.add.at(vals, idx, delta)
+        after = vals[idx]
+        return idx, before, after
+
+    # -- dormancy ------------------------------------------------------
+    def slots_lookup(self, k: np.ndarray) -> np.ndarray:
+        """Slot per key, -1 when absent (read-only probe)."""
+        mask = self.mask
+        idx = ((k.astype(np.uint64) * _HASH_MULT) >> self.shift).astype(np.int64)
+        out = np.full(k.shape[0], -1, dtype=np.int64)
+        pending = np.arange(k.shape[0])
+        while pending.size:
+            slots = idx[pending]
+            cur = self.keys[slots]
+            hit = cur == k[pending]
+            out[pending[hit]] = slots[hit]
+            done = hit | (cur == -1)
+            pending = pending[~done]
+            idx[pending] = (idx[pending] + 1) & mask
+        return out
+
+    def dormant_mask(self, k: np.ndarray) -> np.ndarray:
+        slots = self.slots_lookup(k)
+        out = np.zeros(k.shape[0], dtype=bool)
+        found = slots >= 0
+        out[found] = self.dorm[slots[found]] != 0
+        return out
+
+    def set_dormant(self, key: int) -> None:
+        mask = self.mask
+        keys = self.keys
+        idx = ((key * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> int(self.shift)
+        while True:
+            cur = keys[idx]
+            if cur == key:
+                self.dorm[idx] = 1
+                return
+            if cur == -1:
+                return  # absent keys have count 0: nothing to mark
+            idx = (idx + 1) & mask
+
+    def is_dormant(self, key: int) -> bool:
+        mask = self.mask
+        keys = self.keys
+        idx = ((key * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> int(self.shift)
+        while True:
+            cur = keys[idx]
+            if cur == key:
+                return bool(self.dorm[idx])
+            if cur == -1:
+                return False
+            idx = (idx + 1) & mask
 
 
 _TRIU_CACHE: dict[int, tuple[np.ndarray, np.ndarray]] = {}
@@ -320,22 +644,47 @@ def _step_pairs(sets: list[tuple], snaps: list[tuple], set_signs: list[int]):
 
 
 class _ColStore:
-    """Compacted column digit store: parallel (rows, poss, digs) vectors
-    for the live digits plus a ``(row, pos) -> slot`` index.  Removal
-    swaps the last live slot in, so ``[:n]`` is always dense and directly
-    usable by vectorized pair-key / occurrence / depth computations."""
+    """Compacted column digit store: parallel (rows, poss, digs, toks)
+    vectors for the live digits plus a ``(row, pos) -> slot`` index.
+    Removal swaps the last live slot in, so ``[:n]`` is always dense and
+    directly usable by vectorized pair-key / occurrence / depth
+    computations.  ``toks`` caches ``row << _TOK_BITS | pos`` per digit;
+    the arena engine's pair builder consumes (toks, digs) windows
+    directly.  With ``alloc`` (an arena's bump allocator) the vectors
+    are windows into flat reusable buffers, and growth is an
+    index-window move — the live slice relocates to a fresh window, the
+    backing buffers persist across solves."""
 
-    __slots__ = ("rows", "poss", "digs", "n", "index", "by_row")
+    __slots__ = ("rows", "poss", "digs", "toks", "n", "index", "by_row", "_alloc")
 
-    def __init__(self, rows, poss, digs) -> None:
-        self.rows = np.asarray(rows, dtype=np.int64)
-        self.poss = np.asarray(poss, dtype=np.int64)
-        self.digs = np.asarray(digs, dtype=np.int64)
-        self.n = int(self.rows.shape[0])
+    def __init__(self, rows, poss, digs, alloc=None) -> None:
+        rows = np.asarray(rows, dtype=np.int64)
+        poss = np.asarray(poss, dtype=np.int64)
+        digs = np.asarray(digs, dtype=np.int64)
+        n = int(rows.shape[0])
+        self._alloc = alloc
+        if alloc is not None:
+            # digits only ever move within a column (k removed pairs are
+            # replaced by k digits of the new row), so n never exceeds
+            # the initial count; +4 absorbs the degenerate tiny columns
+            w = alloc(n + 4)
+            w["rows"][:n] = rows
+            w["poss"][:n] = poss
+            w["digs"][:n] = digs
+            self.rows = w["rows"]
+            self.poss = w["poss"]
+            self.digs = w["digs"]
+            self.toks = w["toks"]
+        else:
+            self.rows, self.poss, self.digs = rows, poss, digs
+            self.toks = np.empty(n, dtype=np.int64)
+        np.left_shift(self.rows[:n], _TOK_BITS, out=self.toks[:n])
+        np.bitwise_or(self.toks[:n], self.poss[:n], out=self.toks[:n])
+        self.n = n
         self.index = {}
         self.by_row: dict[int, dict[int, int]] = {}
         for k, (r, p, d) in enumerate(
-            zip(self.rows.tolist(), self.poss.tolist(), self.digs.tolist())
+            zip(rows.tolist(), poss.tolist(), digs.tolist())
         ):
             self.index[(r, p)] = k
             self.by_row.setdefault(r, {})[p] = d
@@ -356,15 +705,22 @@ class _ColStore:
         assert (row, pos) not in self.index, "duplicate digit slot"
         if self.n == self.rows.shape[0]:
             cap = max(2 * self.n, 8)
-            for name in ("rows", "poss", "digs"):
-                a = getattr(self, name)
-                b = np.zeros(cap, dtype=np.int64)
-                b[: self.n] = a[: self.n]
-                setattr(self, name, b)
+            if self._alloc is not None:
+                w = self._alloc(cap)
+                for name in ("rows", "poss", "digs", "toks"):
+                    w[name][: self.n] = getattr(self, name)[: self.n]
+                    setattr(self, name, w[name])
+            else:
+                for name in ("rows", "poss", "digs", "toks"):
+                    a = getattr(self, name)
+                    b = np.zeros(cap, dtype=np.int64)
+                    b[: self.n] = a[: self.n]
+                    setattr(self, name, b)
         k = self.n
         self.rows[k] = row
         self.poss[k] = pos
         self.digs[k] = d
+        self.toks[k] = (row << _TOK_BITS) | pos
         self.index[(row, pos)] = k
         self.by_row.setdefault(row, {})[pos] = d
         self.n += 1
@@ -378,6 +734,7 @@ class _ColStore:
             self.rows[k] = r2
             self.poss[k] = p2
             self.digs[k] = self.digs[last]
+            self.toks[k] = self.toks[last]
             self.index[(r2, p2)] = k
         self.n = last
         m = self.by_row[row]
@@ -411,14 +768,30 @@ class CSE:
         *,
         engine: str = "batch",
         build_counts: bool = True,
+        arena: Optional[CSEArena] = None,
     ) -> None:
-        if engine not in ("heap", "batch"):
+        if engine not in ("heap", "batch", "arena"):
             raise ValueError(f"unknown CSE engine {engine!r}")
         self.prog = prog
         self.budgets = budgets if budgets is not None else [None] * len(coeff_cols)
         self.weighted = weighted
         self.assembly_dedup = assembly_dedup
         self.engine = engine
+        # engine="arena": claim the (per-thread, unless given) workspace
+        # for this run; released at the end of run().  A busy arena —
+        # another live arena CSE on this thread — falls back to a fresh
+        # private workspace so correctness never depends on reuse.
+        self.arena: Optional[CSEArena] = None
+        self._arena_owned = False
+        alloc = None
+        if engine == "arena":
+            ar = arena if arena is not None else get_thread_arena()
+            if not ar.acquire(owner=self):
+                ar = CSEArena()
+                ar.acquire(owner=self)
+            self.arena = ar
+            self._arena_owned = True
+            alloc = ar.col_alloc
         # beyond-paper: under tight delay budgets, prefer subexpressions
         # with shallow operands (they leave headroom for further reuse
         # before the per-output depth budget binds):
@@ -439,31 +812,49 @@ class CSE:
             csd = to_csd(coeffs)  # [n, B]
             rr, pp = np.nonzero(csd)
             self.cols.append(
-                _ColStore(rows[rr], pp.astype(np.int64), csd[rr, pp].astype(np.int64))
+                _ColStore(
+                    rows[rr], pp.astype(np.int64), csd[rr, pp].astype(np.int64),
+                    alloc=alloc,
+                )
             )
 
         # Frequency machinery (packed-int keyed).  Start tiny: the real
         # table is sized by _build_initial_counts, and the assembly-only
         # path (build_counts=False) never touches it.
-        self.counts = _CountTable(1 << 8)
+        if engine == "arena":
+            self.counts: _CountTable = _ArenaCountTable(self.arena)
+            if not build_counts:
+                self.counts.reset(0)
+        else:
+            self.counts = _CountTable(1 << 8)
         # program row -> columns that may contain digits of that row
         self.row_cols: dict[int, set[int]] = {}
         self._weights: dict[int, float] = {}
         # keys whose last implementation attempt failed; excluded from
-        # selection until their count next increases
+        # selection until their count next increases.  heap/batch track
+        # them in a Python set; arena keeps a dormancy byte per count-
+        # table slot (_any_dormant just gates the vectorized probe).
         self._dormant: set[int] = set()
+        self._any_dormant = False
         self._impl_cache: dict[int, int] = {}
         self._combine_cache: dict[tuple, Term] = {}
 
         # engine="heap": (-priority, key) entries, lazy deletion
         self.heap: list[tuple[float, int]] = []
-        # engine="batch": active candidate arrays + deferred rest tier
+        # engine="batch"/"arena": active candidate arrays + deferred rest
+        # tier (arena: tier arrays live in the reusable workspace)
         self._gen = 0
         self._an = 0
-        self._akeys = np.empty(0, dtype=np.int64)
-        self._apri = np.empty(0, dtype=np.float64)
-        self._awt = np.empty(0, dtype=np.float64)  # static per-key weights
-        self._agen = np.empty(0, dtype=np.int64)
+        if engine == "arena":
+            self._akeys = self.arena.take("tier_keys", 1024)
+            self._apri = self.arena.take("tier_pri", 1024, np.float64)
+            self._awt = self.arena.take("tier_wt", 1024, np.float64)
+            self._agen = self.arena.take("tier_gen", 1024)
+        else:
+            self._akeys = np.empty(0, dtype=np.int64)
+            self._apri = np.empty(0, dtype=np.float64)
+            self._awt = np.empty(0, dtype=np.float64)  # static per-key weights
+            self._agen = np.empty(0, dtype=np.int64)
         self._rest: Optional[np.ndarray] = None
         self._rest_bound = -np.inf
 
@@ -579,8 +970,11 @@ class CSE:
         # One vectorized pass: concatenate every column's live digits,
         # offset each column's cached upper-triangle indices into the
         # concatenated frame, then pack and count ALL pairs with one
-        # _canon_pack + np.unique — no per-column tables or gathers.
-        parts: list[tuple] = []
+        # pack + np.unique — no per-column tables or gathers.  The arena
+        # engine packs straight from the cached (token, digit) vectors
+        # and counts into the reusable pre-sized table.
+        arena = self.engine == "arena"
+        stores: list[_ColStore] = []
         ii_parts: list[np.ndarray] = []
         jj_parts: list[np.ndarray] = []
         off = 0
@@ -588,28 +982,39 @@ class CSE:
             n = len(store)
             if n < 2:
                 continue
-            rows, poss, digs = store.live()
-            self._register_rows(rows, c)
-            parts.append((rows, poss, digs))
+            self._register_rows(store.rows[:n], c)
+            stores.append(store)
             ii, jj = _triu(n)
             ii_parts.append(ii + off)
             jj_parts.append(jj + off)
             off += n
-        if not parts:
+        if not stores:
+            if arena:
+                self.counts.reset(0)
             return
-        cat = _concat3(parts)
         ii = np.concatenate(ii_parts) if len(ii_parts) > 1 else ii_parts[0]
         jj = np.concatenate(jj_parts) if len(jj_parts) > 1 else jj_parts[0]
-        packed = _canon_pack(
-            cat[0][ii], cat[1][ii], cat[2][ii],
-            cat[0][jj], cat[1][jj], cat[2][jj],
-        )
+        if arena:
+            cat_tok = np.concatenate([s.toks[: s.n] for s in stores])
+            cat_dig = np.concatenate([s.digs[: s.n] for s in stores])
+            packed = _pack_pair_keys(
+                cat_tok[ii], cat_dig[ii], cat_tok[jj], cat_dig[jj]
+            )
+        else:
+            cat = _concat3([s.live() for s in stores])
+            packed = _canon_pack(
+                cat[0][ii], cat[1][ii], cat[2][ii],
+                cat[0][jj], cat[1][jj], cat[2][jj],
+            )
         uniq, cnt = np.unique(packed, return_counts=True)
         sums = cnt.astype(np.int64)
-        cap = 1 << 16
-        while uniq.shape[0] * 3 > cap:
-            cap *= 2
-        self.counts = _CountTable(cap)
+        if arena:
+            self.counts.reset(uniq.shape[0])
+        else:
+            cap = 1 << 16
+            while uniq.shape[0] * 3 > cap:
+                cap *= 2
+            self.counts = _CountTable(cap)
         self.counts.add_batch(uniq, sums)
         mask = sums >= 2
         keys2, cnts2 = uniq[mask], sums[mask]
@@ -658,6 +1063,9 @@ class CSE:
         the rest tier (their cached scores are upper bounds, so folding
         them into the stale bound keeps selection exact) — the running-max
         scan stays O(_TIER) for the whole run."""
+        if self.engine == "arena":
+            self._compact_arena(m)
+            return
         live = self._apri[: self._an] > 0.0
         an = int(live.sum())
         ak = self._akeys[: self._an][live]
@@ -667,17 +1075,7 @@ class CSE:
         if an > 2 * _TIER:
             thr = np.partition(ap, an - _TIER)[an - _TIER]
             hi = ap >= thr
-            demoted_keys = ak[~hi]
-            demoted_pris = ap[~hi]
-            if demoted_keys.shape[0]:
-                if self._rest is None:
-                    self._rest = demoted_keys
-                    self._rest_bound = float(demoted_pris.max())
-                else:
-                    self._rest = np.concatenate([self._rest, demoted_keys])
-                    self._rest_bound = max(
-                        self._rest_bound, float(demoted_pris.max())
-                    )
+            self._demote_to_rest(ak[~hi], ap[~hi])
             ak, ap, aw, ag = ak[hi], ap[hi], aw[hi], ag[hi]
             an = ak.shape[0]
         cap = max(self._akeys.shape[0], 1024)
@@ -692,6 +1090,59 @@ class CSE:
             setattr(self, name, buf)
         self._an = an
 
+    def _compact_arena(self, m: int) -> None:
+        """Arena tier compaction: live entries are moved down **inside**
+        the workspace buffers (gather through a scratch window, write
+        back — an index-window move) instead of copied into fresh
+        arrays; only a genuine capacity shortfall reallocates."""
+        an = self._an
+        ar = self.arena
+        live_idx = np.flatnonzero(self._apri[:an] > 0.0)
+        k = live_idx.shape[0]
+        if k > 2 * _TIER:
+            ap = self._apri[live_idx]
+            thr = np.partition(ap, k - _TIER)[k - _TIER]
+            hi = ap >= thr
+            demoted = live_idx[~hi]
+            self._demote_to_rest(self._akeys[demoted], self._apri[demoted])
+            live_idx = live_idx[hi]
+            k = live_idx.shape[0]
+        for name, arr, dt in (
+            ("c_keys", self._akeys, np.int64), ("c_pri", self._apri, np.float64),
+            ("c_wt", self._awt, np.float64), ("c_gen", self._agen, np.int64),
+        ):
+            tmp = ar.take(name, k, dt)
+            np.take(arr, live_idx, out=tmp[:k])
+            arr[:k] = tmp[:k]
+        self._an = k
+        if k + m > self._akeys.shape[0]:
+            cap = self._akeys.shape[0]
+            while k + m > cap:
+                cap *= 2
+            for nm, dt, attr in (
+                ("tier_keys", np.int64, "_akeys"), ("tier_pri", np.float64, "_apri"),
+                ("tier_wt", np.float64, "_awt"), ("tier_gen", np.int64, "_agen"),
+            ):
+                old = getattr(self, attr)
+                buf = ar.take(nm, cap, dt)
+                buf[:k] = old[:k]
+                setattr(self, attr, buf)
+
+    def _demote_to_rest(self, keys: np.ndarray, pris: np.ndarray) -> None:
+        """Fold demoted candidate entries into the deferred rest tier.
+        Their cached priorities are upper bounds, so folding them into
+        the single stale bound keeps selection exact (shared by the
+        batch and arena compaction paths — the demotion rule must stay
+        identical for the engines to stay bit-identical)."""
+        if not keys.shape[0]:
+            return
+        if self._rest is None:
+            self._rest = keys
+            self._rest_bound = float(pris.max())
+        else:
+            self._rest = np.concatenate([self._rest, keys])
+            self._rest_bound = max(self._rest_bound, float(pris.max()))
+
     def _reload_rest(self) -> None:
         """Re-score the deferred tier in one vectorized sweep and
         re-partition it (called when the running best decays to the stale
@@ -701,11 +1152,10 @@ class CSE:
         self.stats.n_tier_reloads += 1
         cnts = self.counts.get_batch(rest)
         viable = cnts >= 2
-        if self._dormant and viable.any():
-            dorm = np.fromiter(
-                (k in self._dormant for k in rest.tolist()), bool, rest.shape[0]
-            )
-            viable &= ~dorm
+        if viable.any():
+            dorm = self._dormant_mask_of(rest)
+            if dorm is not None:
+                viable &= ~dorm
         keys = rest[viable]
         if keys.shape[0] == 0:
             return
@@ -720,6 +1170,31 @@ class CSE:
                 self._rest_bound = float(lo_pris.max())
             keys, pris, wts = keys[hi], pris[hi], wts[hi]
         self._active_append(keys, pris, wts)
+
+    def _mark_dormant(self, key: int) -> None:
+        if self.engine == "arena":
+            self.counts.set_dormant(key)
+        else:
+            self._dormant.add(key)
+        self._any_dormant = True
+
+    def _is_dormant(self, key: int) -> bool:
+        if not self._any_dormant:
+            return False
+        if self.engine == "arena":
+            return self.counts.is_dormant(key)
+        return key in self._dormant
+
+    def _dormant_mask_of(self, keys: np.ndarray) -> Optional[np.ndarray]:
+        """Boolean dormancy mask for an array of keys (None = none are)."""
+        if not self._any_dormant:
+            return None
+        if self.engine == "arena":
+            return self.counts.dormant_mask(keys)
+        d = self._dormant
+        if not d:
+            return None
+        return np.fromiter((k in d for k in keys.tolist()), bool, keys.shape[0])
 
     def _apply_deltas(self, keys: np.ndarray, signs: np.ndarray) -> None:
         """One signed-delta count update for a whole implementation step
@@ -760,6 +1235,31 @@ class CSE:
             else:
                 self._active_append(pkeys, pris, wts)
 
+    def _apply_deltas_arena(self, keys: np.ndarray, signs: np.ndarray) -> None:
+        """Fused count update of one implementation step: claim a slot
+        per (non-unique) pair key, scatter the signed deltas with one
+        ``np.add.at``, and read each key's net movement off the before /
+        after slot values — no per-step sort, reduceat, or dedup.  A key
+        whose count rose to >= 2 wakes from dormancy and (re)enters the
+        active tier at its exact new priority, matching the batch
+        engine's rule bit for bit (within one step a key's deltas all
+        share a sign, so before/after comparison equals the net-delta
+        test on the deduplicated stream)."""
+        n = keys.shape[0]
+        if not n:
+            return
+        tab: _ArenaCountTable = self.counts
+        slots, before, after = tab.scatter_add(keys, signs)
+        self._gen += 1  # cached tier scores may now be stale
+        inc = (after > before) & (after >= 2)
+        if not inc.any():
+            return
+        tab.dorm[slots[inc]] = 0
+        uq, ui = np.unique(keys[inc], return_index=True)
+        pv = after[inc][ui]
+        wts = self._weights_vec(uq)
+        self._active_append(uq, pv * wts, wts)
+
     # ------------------------------------------------------------------
     # Occurrence search
     # ------------------------------------------------------------------
@@ -789,9 +1289,13 @@ class CSE:
                     continue
                 # digits are +-1, so d_i * d_j == sign  <=>  d_j == sign * d_i
                 dj_get = dj_map.get
-                ps = sorted(
-                    p for p, d in di_map.items() if dj_get(p + s) == sign * d
-                )
+                if len(di_map) == 1:
+                    (p, d), = di_map.items()
+                    ps = [p] if dj_get(p + s) == sign * d else []
+                else:
+                    ps = sorted(
+                        p for p, d in di_map.items() if dj_get(p + s) == sign * d
+                    )
             else:
                 if len(di_map) < 2:
                     continue
@@ -814,11 +1318,19 @@ class CSE:
     # Main loop
     # ------------------------------------------------------------------
     def run(self) -> list[Optional[Term]]:
-        if self.engine == "heap":
-            self._run_heap()
-        else:
-            self._run_batch()
-        return self._assemble()
+        try:
+            if self.engine == "heap":
+                self._run_heap()
+            else:
+                self._run_batch()
+            return self._assemble()
+        finally:
+            if self._arena_owned:
+                # hand the workspace back for the next solve on this
+                # thread; the stores' windows become reusable, so a CSE
+                # must not be mutated after run() (solve_cmvm never does)
+                self.arena.release()
+                self._arena_owned = False
 
     def _run_heap(self) -> None:
         """Exact lazy max-heap realisation of the selection rule."""
@@ -850,9 +1362,9 @@ class CSE:
 
     def _run_batch(self) -> None:
         """Generation-stamped candidate-array realisation of the selection
-        rule: zero heap operations on the common path."""
+        rule (shared by the batch and arena engines): zero heap
+        operations on the common path."""
         counts = self.counts
-        dormant = self._dormant
         while True:
             an = self._an
             best = self._apri[:an].max() if an else -np.inf
@@ -865,18 +1377,30 @@ class CSE:
             idxs = np.nonzero(self._apri[:an] == best)[0]
             kk = self._akeys[idxs]
             stale = self._agen[idxs] != self._gen
-            if stale.any():
-                self.stats.n_stale_corrections += int(stale.sum())
-                sk = kk[stale]
-                cnts = counts.get_batch(sk)
-                pri = np.where(cnts >= 2, cnts * self._awt[idxs[stale]], 0.0)
-                if dormant:
-                    dorm = np.fromiter(
-                        (k in dormant for k in sk.tolist()), bool, sk.shape[0]
-                    )
-                    pri[dorm] = 0.0
-                self._apri[idxs[stale]] = pri
-                self._agen[idxs[stale]] = self._gen
+            n_stale = int(stale.sum())
+            if n_stale:
+                self.stats.n_stale_corrections += n_stale
+                if n_stale <= 4:
+                    # scalar probes beat the vectorized machinery on the
+                    # typical 1-2 entry correction (same arithmetic)
+                    gen = self._gen
+                    for q in idxs[stale].tolist():
+                        kq = int(self._akeys[q])
+                        cnt = counts.get(kq)
+                        if cnt >= 2 and not self._is_dormant(kq):
+                            self._apri[q] = cnt * self._awt[q]
+                        else:
+                            self._apri[q] = 0.0
+                        self._agen[q] = gen
+                else:
+                    sk = kk[stale]
+                    cnts = counts.get_batch(sk)
+                    pri = np.where(cnts >= 2, cnts * self._awt[idxs[stale]], 0.0)
+                    dorm = self._dormant_mask_of(sk)
+                    if dorm is not None:
+                        pri[dorm] = 0.0
+                    self._apri[idxs[stale]] = pri
+                    self._agen[idxs[stale]] = self._gen
             winners = kk[self._apri[idxs] == best]
             if winners.shape[0] == 0:
                 continue  # every entry at `best` was stale-high
@@ -893,10 +1417,14 @@ class CSE:
                 self._apri[sel] = pri
                 self._agen[sel] = self._gen
             else:
-                dormant.add(key)
+                self._mark_dormant(key)
                 # zero the key's cached entries so the running max moves on
                 sel = self._akeys[: self._an] == key
                 self._apri[: self._an][sel] = 0.0
+            if self._an > 3 * _TIER and self.engine == "arena":
+                # keep the running-max scan short: drop dead entries in
+                # place (exactness-preserving whenever it runs)
+                self._compact(0)
 
     def _implement(self, key: int) -> bool:
         i, j, s, sign = _unpack_key(key)
@@ -950,6 +1478,9 @@ class CSE:
             u = self.prog.add_op(i, j, max(0, -s), max(0, s), sign)
             self._impl_cache[key] = u
         self.stats.n_patterns_implemented += 1
+        if self.engine == "arena":
+            self._replace_occurrences_arena(u, i, j, s, accepted)
+            return True
         # Replace occurrences column by column, collecting the removed and
         # added digit sets plus a view of each column's post-removal store;
         # every digit pair the step touches is then built block-structured
@@ -998,6 +1529,155 @@ class CSE:
             packed = _canon_pack(a[0], a[1], a[2], b[0], b[1], b[2])
             self._apply_deltas(packed, signs)
         return True
+
+    def _replace_occurrences_arena(self, u, i, j, s, accepted) -> None:
+        """Fused replace + count-delta pass of the arena engine.
+
+        Removes and adds digits through the arena-resident stores, then
+        builds every pair key the step touches straight from the cached
+        (token, digit) windows into reusable scratch — one pass replaces
+        ``_step_pairs`` + ``_canon_pack`` + the sort/reduceat dedup of
+        ``_apply_deltas``.  The pair multiset is identical to the batch
+        engine's: each removed/added digit against its column's
+        post-removal snapshot, plus the pairs inside each set.  The
+        snapshot of a column is concatenated once and shared by that
+        column's removed and added sets via per-set offsets."""
+        ar = self.arena
+        cols = self.cols
+        row_cols = self.row_cols
+        stats = self.stats
+        ncols = len(accepted)
+        n_occ = 0
+        for ps in accepted.values():
+            n_occ += ps.shape[0]
+        na = 3 * n_occ  # A-side digits: 2 removed + 1 added per occurrence
+        a_tok = ar.take("a_tok", na)
+        a_dig = ar.take("a_dig", na)
+        nsets = 2 * ncols
+        set_m = ar.take("set_m", nsets)
+        set_n = ar.take("set_n", nsets)
+        set_off = ar.take("set_off", nsets)
+        i_t = np.int64(i) << _TOK_BITS
+        j_t = np.int64(j) << _TOK_BITS
+        u_t = np.int64(u) << _TOK_BITS
+        off0 = min(0, s)
+        w = 0           # removed sets fill [0, 2*n_occ)
+        wa = 2 * n_occ  # added sets fill [2*n_occ, 3*n_occ)
+        si = 0
+        boff = 0
+        snaps: list[tuple[np.ndarray, np.ndarray]] = []
+        i_ti = int(i_t)
+        j_ti = int(j_t)
+        u_ti = int(u_t)
+        for c, ps in accepted.items():
+            store = cols[c]
+            k = ps.shape[0]
+            pl = ps.tolist()
+            if k <= 2:
+                # scalar writes beat 1-2 element vector ops (same values)
+                for t, p in enumerate(pl):
+                    a_tok[w + t] = i_ti | p
+                    a_tok[w + k + t] = j_ti | (p + s)
+                    a_tok[wa + t] = u_ti | (p + off0)
+            else:
+                a_tok[w : w + k] = i_t | ps
+                a_tok[w + k : w + 2 * k] = j_t | (ps + s)
+                a_tok[wa : wa + k] = u_t | (ps + off0)
+            rd = a_dig[w : w + 2 * k]
+            rem = store.remove
+            for t, p in enumerate(pl):
+                d = rem(i, p)
+                rd[t] = d
+                a_dig[wa + t] = d
+            for t, p in enumerate(pl):
+                rd[k + t] = rem(j, p + s)
+            n_c = store.n
+            set_m[si] = 2 * k
+            set_n[si] = n_c
+            set_off[si] = boff
+            set_m[ncols + si] = k
+            set_n[ncols + si] = n_c
+            set_off[ncols + si] = boff
+            # live views stay valid without copying: from here on this
+            # store only appends (and a window move freezes, never
+            # mutates, the viewed buffer)
+            snaps.append((store.toks[:n_c], store.digs[:n_c]))
+            boff += n_c
+            cols_u = row_cols.get(u)
+            if cols_u is None:
+                row_cols[u] = {c}
+            else:
+                cols_u.add(c)
+            add = store.add
+            for t, p in enumerate(pl):
+                add(u, p + off0, int(rd[t]))
+            stats.n_occurrences_replaced += k
+            w += 2 * k
+            wa += k
+            si += 1
+        # ---- pair-key build: A x snapshot cross products + intra-set ----
+        b_tok = ar.take("b_tok", max(boff, 1))
+        b_dig = ar.take("b_dig", max(boff, 1))
+        o = 0
+        for tk, dg in snaps:
+            nn = tk.shape[0]
+            b_tok[o : o + nn] = tk
+            b_dig[o : o + nn] = dg
+            o += nn
+        m_t = set_m[:nsets]
+        reps = np.repeat(set_n[:nsets], m_t)  # pairs per A element
+        n_cross = int(reps.sum())
+        # intra-set pairs: concatenate every set's offset upper-triangle
+        # indices, then gather once (removed sets lead, so signs are two
+        # contiguous fills)
+        tri_ii: list[np.ndarray] = []
+        tri_jj: list[np.ndarray] = []
+        tri_n = 0
+        rem_tri = 0
+        off_a = 0
+        for t in range(nsets):
+            mm = int(set_m[t])
+            if mm > 1:
+                ii, jj = _triu(mm)
+                tri_ii.append(ii + off_a)
+                tri_jj.append(jj + off_a)
+                tri_n += ii.shape[0]
+                if t < ncols:
+                    rem_tri = tri_n
+            off_a += mm
+        tot = n_cross + tri_n
+        if tot == 0:
+            return
+        p_tA = ar.take("p_tA", tot)
+        p_dA = ar.take("p_dA", tot)
+        p_tB = ar.take("p_tB", tot)
+        p_dB = ar.take("p_dB", tot)
+        p_sg = ar.take("p_sg", tot)
+        if n_cross:
+            ends = np.cumsum(reps)
+            off_elem = np.repeat(set_off[:nsets], m_t)  # B offset per element
+            base = np.repeat(ends - reps - off_elem, reps)
+            gidx = np.arange(n_cross, dtype=np.int64) - base
+            p_tA[:n_cross] = np.repeat(a_tok[:na], reps)
+            p_dA[:n_cross] = np.repeat(a_dig[:na], reps)
+            np.take(b_tok, gidx, out=p_tB[:n_cross])
+            np.take(b_dig, gidx, out=p_dB[:n_cross])
+            # A elements are laid out removed-first, so pair signs are two
+            # contiguous fills instead of a repeat chain
+            rem_cross = int(reps[: 2 * n_occ].sum())
+            p_sg[:rem_cross] = -1
+            p_sg[rem_cross:n_cross] = 1
+        if tri_n:
+            ii = np.concatenate(tri_ii) if len(tri_ii) > 1 else tri_ii[0]
+            jj = np.concatenate(tri_jj) if len(tri_jj) > 1 else tri_jj[0]
+            np.take(a_tok, ii, out=p_tA[n_cross:tot])
+            np.take(a_dig, ii, out=p_dA[n_cross:tot])
+            np.take(a_tok, jj, out=p_tB[n_cross:tot])
+            np.take(a_dig, jj, out=p_dB[n_cross:tot])
+            p_sg[n_cross : n_cross + rem_tri] = -1
+            p_sg[n_cross + rem_tri : tot] = 1
+        keys = _pack_pair_keys(p_tA[:tot], p_dA[:tot], p_tB[:tot], p_dB[:tot])
+        self._apply_deltas_arena(keys, p_sg[:tot])
 
     # ------------------------------------------------------------------
     # Final adder-tree assembly per column

@@ -24,8 +24,7 @@ from typing import Optional
 
 import numpy as np
 
-from .fixed_point import QInterval, qint_add_shifted
-from .cost import adder_cost
+from .fixed_point import QInterval
 
 KIND_INPUT = 0
 KIND_ADD = 1  # u = (a << sh_a) + sign * (b << sh_b)
@@ -97,17 +96,62 @@ class DAISProgram:
         return len(self.rows) - 1
 
     def add_op(self, a: int, b: int, sh_a: int, sh_b: int, sign: int) -> int:
-        """Append ``u = (a << sh_a) + sign * (b << sh_b)``; returns row idx."""
+        """Append ``u = (a << sh_a) + sign * (b << sh_b)``; returns row idx.
+
+        The interval and cost arithmetic is inlined (equivalent to
+        ``qint_add_shifted`` + ``adder_cost`` on the shifted qints, with
+        operands pre-shifted so the cost model sees zero shifts): this is
+        the solver's per-adder hot path, and constructing the
+        intermediate shifted QIntervals dominated its runtime.
+        """
         if min(sh_a, sh_b) != 0:
             # normalise: factor out the common power of two (free shift)
             m = min(sh_a, sh_b)
             sh_a, sh_b = sh_a - m, sh_b - m
         ra, rb = self.rows[a], self.rows[b]
-        qa, qb = ra.qint.shift(sh_a), rb.qint.shift(sh_b)
-        qint = qint_add_shifted(qa, qb, 0, sign)
+        qA, qB = ra.qint, rb.qint
+        alo, ahi = qA.lo, qA.hi
+        blo, bhi = qB.lo, qB.hi
+        az = alo == 0 == ahi
+        bz = blo == 0 == bhi
+        # QInterval.shift keeps exp unchanged on zero intervals
+        aexp = qA.exp if az else qA.exp + sh_a
+        bexp = qB.exp if bz else qB.exp + sh_b
+        if bz:
+            qint = QInterval(alo, ahi, aexp)
+            cost = 0
+        elif az:
+            qint = (
+                QInterval(blo, bhi, bexp) if sign > 0 else QInterval(-bhi, -blo, bexp)
+            )
+            cost = 0
+        else:
+            exp = aexp if aexp <= bexp else bexp
+            al, ah = alo << (aexp - exp), ahi << (aexp - exp)
+            bl, bh = blo << (bexp - exp), bhi << (bexp - exp)
+            if sign > 0:
+                qint = QInterval(al + bl, ah + bh, exp)
+            else:
+                qint = QInterval(al - bh, ah - bl, exp)
+            # two's-complement widths (QInterval.width inlined)
+            if alo < 0:
+                mag = ahi if ahi > -alo - 1 else -alo - 1
+                wa = mag.bit_length() + 1 if mag > 0 else 1
+            else:
+                wa = ahi.bit_length()
+            if blo < 0:
+                mag = bhi if bhi > -blo - 1 else -blo - 1
+                wb = mag.bit_length() + 1 if mag > 0 else 1
+            else:
+                wb = bhi.bit_length()
+            amsb = aexp + wa - 1
+            bmsb = bexp + wb - 1
+            msb = amsb if amsb >= bmsb else bmsb
+            lsb_hi = aexp if aexp >= bexp else bexp
+            lsb_lo = aexp if aexp <= bexp else bexp
+            # disjoint ranges: splice, not adder logic (see adder_cost)
+            cost = 1 if lsb_hi > msb else msb - lsb_lo + 2
         depth = max(ra.depth, rb.depth) + 1
-        # operands are pre-shifted, so the cost model sees zero shifts
-        cost = adder_cost(qa, qb, 0, 0, sign)
         self.rows.append(Row(KIND_ADD, a, b, sh_a, sh_b, sign, qint, depth, cost))
         return len(self.rows) - 1
 

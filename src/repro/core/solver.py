@@ -93,6 +93,10 @@ def _budgets(
     m: np.ndarray, in_depths: Sequence[int], dc: int
 ) -> tuple[list[Optional[int]], list[int]]:
     """Per-output depth budgets: minimal achievable depth + dc."""
+    if dc < 0:
+        # unconstrained: no caller consumes the per-output minima, so
+        # skip the CSD population counts and tree simulations entirely
+        return [None] * m.shape[1], []
     nnz = csd_nnz(m)  # [d_in, d_out]
     mins: list[int] = []
     for j in range(m.shape[1]):
@@ -100,8 +104,6 @@ def _budgets(
         for i in range(m.shape[0]):
             leaf_depths.extend([in_depths[i]] * int(nnz[i, j]))
         mins.append(min_tree_depth(leaf_depths) if leaf_depths else 0)
-    if dc < 0:
-        return [None] * m.shape[1], mins
     return [mn + dc for mn in mins], mins
 
 
@@ -148,9 +150,10 @@ def solve_cmvm(
         CMVMs, e.g. consecutive NN layers).
     config : :class:`SolverConfig` — dc (delay constraint, -1 =
         unconstrained as in the paper's tables), CSE ``engine`` ("batch"
-        vectorized default / "heap" exact reference, bit-identical),
-        stage-1 ``decompose``, ``weighted``/``dedup``/``depth_weight``
-        CSE scoring knobs.
+        vectorized default / "arena" preallocated-workspace fast path /
+        "heap" exact reference — all bit-identical), stage-1
+        ``decompose``, ``weighted``/``dedup``/``depth_weight`` CSE
+        scoring knobs.
     program / input_rows : optionally extend an existing program whose
         rows ``input_rows`` are this CMVM's inputs (NN layer chaining).
     cache : optional content-addressed :class:`SolutionCache`; only used
@@ -324,13 +327,15 @@ def default_solve_key(
 
 
 def solve_task(payload) -> "Solution":
-    """One CMVM solve from a picklable payload
+    """One CMVM solve from a plain-tuple payload
     ``(w_int, qin, strategy, solver_config_dict)`` — the compiler's
     deferred-solve unit.  Legacy ``(w_int, qin, strategy, dc[, engine])``
     tuples are still accepted.
 
-    Lives in this jax-free module so process-pool workers (see
-    ``repro.nn.compiler``) import only numpy-land code.
+    Lives in this jax-free module so solve-pool workers (the compiler's
+    GIL-releasing thread pool, see ``repro.nn.compiler``) touch only
+    numpy-land code; the payload stays picklable for callers that still
+    want to farm solves across processes.
     """
     w_int, qin, strategy, opts = payload[:4]
     if isinstance(opts, dict):

@@ -162,8 +162,11 @@ class SolverConfig(_ConfigBase):
 
     dc            delay constraint: extra adder-depth levels allowed
                   beyond each output's minimum (-1 = unconstrained).
-    engine        CSE frequency engine: "batch" (vectorized, default) or
-                  "heap" (exact lazy max-heap reference); bit-identical.
+    engine        CSE frequency engine: "batch" (vectorized, default),
+                  "arena" (preallocated-workspace fast path), or "heap"
+                  (exact lazy max-heap reference); all bit-identical.
+                  The engine is part of the config digest, so solution-
+                  cache keys and artifact manifests distinguish engines.
     decompose     enable stage-1 graph decomposition (M = M1 @ M2).
     weighted      weight CSE pair scores by operand width.
     dedup         deduplicate identical terms during assembly.
@@ -180,8 +183,9 @@ class SolverConfig(_ConfigBase):
     def __post_init__(self) -> None:
         self._require(isinstance(self.dc, int) and self.dc >= -1, f"dc must be >= -1, got {self.dc}")
         self._require(
-            self.engine in ("batch", "heap"),
-            f"unknown CSE engine {self.engine!r} (expected 'batch' or 'heap')",
+            self.engine in ("batch", "heap", "arena"),
+            f"unknown CSE engine {self.engine!r} "
+            "(expected 'batch', 'heap', or 'arena')",
         )
         self._require(
             isinstance(self.depth_weight, (int, float)) and self.depth_weight >= 0.0,
@@ -204,8 +208,10 @@ class CompileConfig(_ConfigBase):
     max_delay_per_stage  pipelining budget per register stage.
     use_pallas           execute CMVMs through the Pallas adder-graph
                          kernel instead of the jnp gather executor.
-    jobs                 solver process-pool width (None = cpu_count,
-                         1 = in-process serial); never changes the bits.
+    jobs                 solver thread-pool width (None = cpu_count,
+                         1 = in-line serial); never changes the bits —
+                         serial fallbacks are recorded loudly in
+                         ``solver_stats["pool_fallback"]``.
     cache                optional live ``SolutionCache`` handle; runtime
                          only — excluded from to_dict/digest.
     solver               nested :class:`SolverConfig` (default dc=2).

@@ -21,7 +21,6 @@ tracked symbolically at compile time.
 from __future__ import annotations
 
 import concurrent.futures
-import multiprocessing
 import os
 import time
 from dataclasses import dataclass, field
@@ -100,6 +99,7 @@ class CompiledDesign:
     out_shape: tuple = ()
     out_qints: list[QInterval] = field(default_factory=list)
     # solve-phase accounting: n_solves / n_cache_hits / n_pool_solves /
+    # pool_fallback (why the solve pool went serial, None when it ran) /
     # solver_time_s (sum over unique CMVMs, ~0 when everything hits cache)
     solver_stats: dict = field(default_factory=dict)
     # declarative pipeline: step specs + per-unique-CMVM instruction
@@ -358,9 +358,10 @@ def _align_exps(qints_a, qints_b):
 #           solver runs.  Each unique (matrix, qints, dc, strategy) is
 #           registered once as a _SolveSlot.
 #   solve   resolve the slots: content-addressed cache first, then the
-#           remaining solves either serially or farmed to a process pool
-#           (``jobs=``).  Results stitch back by slot identity, so the
-#           parallel path is bit-identical to the serial one.
+#           remaining solves either serially or on a GIL-releasing
+#           thread pool (``jobs=``; the solver hot loop is pure numpy).
+#           Results stitch back by slot identity, so the parallel path
+#           is bit-identical to the serial one.
 #   stitch  compile instruction tables, pipeline reports, and layer
 #           reports in original layer order.
 
@@ -424,6 +425,25 @@ def _solve_slots(
     jobs: Optional[int],
     cache: Optional[SolutionCache],
 ) -> dict:
+    """Resolve the deferred CMVM solves: cache first, then the remaining
+    misses in a thread pool.
+
+    Versus the process pool this replaces there is no fork/spawn
+    startup and no payload pickling (the old pool serialized every
+    weight matrix twice and paid ~1s of interpreter spin-up, which
+    dominated small-layer compiles).  numpy drops the GIL inside its
+    kernels but the solver's Python-level bookkeeping still serializes
+    part of each solve, so the thread speedup is sublinear — on boxes
+    with little parallel headroom ``jobs=1`` wins outright (see
+    docs/solver_performance.md for measurements).  Each worker thread
+    keeps its own ``CSEArena`` (see repro.core.cse), so
+    ``engine="arena"`` solves stay allocation-quiet across layers.
+    Results stitch back by slot identity: any ``jobs`` value is
+    bit-identical to serial.
+
+    Going serial is never silent: ``pool_fallback`` in the returned
+    stats records why the pool was skipped (None when it actually ran).
+    """
     t0 = time.perf_counter()
     cache_before = cache.stats.as_dict() if cache is not None else None
     n_hits = 0
@@ -438,38 +458,41 @@ def _solve_slots(
                 continue
         misses.append(slot)
     n_pool = 0
+    fallback: Optional[str] = None
     if misses:
         payloads = [
             (s.w_int, s.qin, s.strategy, s.solver_cfg.to_dict()) for s in misses
         ]
         results: Optional[list[Solution]] = None
         jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
-        if jobs_eff != 1 and len(misses) > 1:
+        if jobs_eff == 1:
+            fallback = "jobs=1"
+        elif len(misses) == 1:
+            fallback = "single_solve"
+        else:
             workers = min(jobs_eff, len(misses))
-            # Prefer forkserver: workers fork from a clean helper process
-            # and import only repro.core (numpy) — never jax, whose thread
-            # pools are not fork-safe.  Fall back to plain fork (workers
-            # run pure-numpy code only), then to serial.
-            for method in ("forkserver", "fork"):
-                try:
-                    with concurrent.futures.ProcessPoolExecutor(
-                        workers, mp_context=multiprocessing.get_context(method)
-                    ) as ex:
-                        results = list(ex.map(solve_task, payloads))
-                    n_pool = len(results)
-                    break
-                except Exception:
-                    results = None  # pool unavailable: try next method
+            try:
+                with concurrent.futures.ThreadPoolExecutor(
+                    workers, thread_name_prefix="da4ml-solve"
+                ) as ex:
+                    results = list(ex.map(solve_task, payloads))
+                n_pool = len(results)
+            except Exception as e:  # pool unavailable: loud serial fallback
+                results = None
+                fallback = f"thread_pool_error: {type(e).__name__}: {e}"
         if results is None:
             results = [solve_task(p) for p in payloads]
         for slot, sol in zip(misses, results):
             slot.solution = sol
             if cache is not None:
                 cache.put(slot.key, sol)
+    else:
+        fallback = "no_cache_misses" if slots else "no_cmvm_layers"
     stats = {
         "n_solves": len(misses),
         "n_cache_hits": n_hits,
         "n_pool_solves": n_pool,
+        "pool_fallback": fallback,
         "solver_time_s": sum(s.solution.solver_time_s for s in slots),
         "solve_phase_s": time.perf_counter() - t0,
     }
@@ -517,11 +540,13 @@ def compile_model(
     so both spellings produce bit-identical designs.
 
     Config highlights — ``strategy`` ("da" solver / "latency" baseline);
-    ``jobs`` (CMVM solver parallelism: None = cpu_count, 1 = serial; any
-    value is bit-identical); ``cache`` (a :class:`SolutionCache` so
-    repeated compiles skip solved CMVMs entirely); ``solver`` (nested
-    :class:`SolverConfig`: dc, CSE engine, scoring knobs — compile
-    default dc=2).
+    ``jobs`` (CMVM solver thread-pool width: None = cpu_count, 1 =
+    serial; any value is bit-identical, and serial fallbacks are
+    recorded in ``solver_stats["pool_fallback"]``); ``cache`` (a
+    :class:`SolutionCache` so repeated compiles skip solved CMVMs
+    entirely); ``solver`` (nested :class:`SolverConfig`: dc, CSE engine
+    — "arena" reuses per-thread workspaces across layers — and scoring
+    knobs; compile default dc=2).
     """
     legacy = {
         name: val

@@ -231,6 +231,7 @@ def load_design(path: Union[str, Path]) -> CompiledDesign:
         "n_solves": 0,
         "n_cache_hits": 0,
         "n_pool_solves": 0,
+        "pool_fallback": "loaded_from_artifact",
         "solver_time_s": 0.0,
         "loaded_from_artifact": True,
         "load_s": time.perf_counter() - t0,

@@ -92,6 +92,15 @@ class _ModelRunner(threading.Thread):
         self.n_batches = 0
         self.n_rejected = 0
         self._occupancy_sum = 0.0
+        # serving-perf observability: how often each bucket shape is
+        # dispatched, and which bucket shapes have been jit-compiled.
+        # jit caches per shape for a fixed design, so each flag is 0/1 —
+        # a bookkeeping mirror of "first dispatch or warmup touched this
+        # bucket", not an XLA retrace counter.  Without an up-front
+        # warmup, flags flipping mid-traffic are exactly the requests
+        # that paid a compile in their latency.
+        self.bucket_hits: dict[int, int] = {b: 0 for b in self.buckets}
+        self.jit_compiles: dict[int, int] = {b: 0 for b in self.buckets}
         self._fn = jax.jit(design.forward_int)
         self._stop = threading.Event()
         self._drained = threading.Event()
@@ -174,6 +183,10 @@ class _ModelRunner(threading.Thread):
             r.future.set_result(y[i])
             self.metrics.record(now - r.t_submit, now=now)
         self.n_batches += 1
+        # counted only on success, keeping sum(bucket_hits) == n_batches
+        self.bucket_hits[b] += 1
+        if not self.jit_compiles[b]:
+            self.jit_compiles[b] = 1  # first dispatch of this shape compiles
         self._occupancy_sum += n / b
 
     # -- control -------------------------------------------------------
@@ -181,6 +194,8 @@ class _ModelRunner(threading.Thread):
         """Compile every bucket shape up front; returns wall seconds."""
         t0 = time.perf_counter()
         for b in self.buckets:
+            if not self.jit_compiles[b]:
+                self.jit_compiles[b] = 1
             np.asarray(self._fn(np.zeros((b, *self.in_shape), np.int32)))
         return time.perf_counter() - t0
 
@@ -200,6 +215,14 @@ class _ModelRunner(threading.Thread):
                 self._occupancy_sum / self.n_batches if self.n_batches else 0.0
             ),
             buckets=list(self.buckets),
+            # bucket hit histogram + which bucket shapes have been jit
+            # compiled (0/1 per bucket; jax caches by shape): batches
+            # landing in oversized buckets, or — when serving without an
+            # up-front warmup — shapes compiling mid-traffic, show up
+            # here instead of only as a latency blip
+            bucket_hits={int(b): int(c) for b, c in self.bucket_hits.items()},
+            jit_compiles={int(b): int(c) for b, c in self.jit_compiles.items()},
+            n_jit_compiles=int(sum(self.jit_compiles.values())),
         )
         return s
 

@@ -65,7 +65,7 @@ def _int_input(in_shape, in_quant, batch=16, seed=0):
 
 
 @pytest.mark.parametrize("strategy", ["da", "latency"])
-@pytest.mark.parametrize("engine", ["batch", "heap"])
+@pytest.mark.parametrize("engine", ["batch", "heap", "arena"])
 def test_roundtrip_bit_exact_strategy_engine_grid(tmp_path, strategy, engine):
     _, _, in_shape, in_quant, design, loaded = _compile(
         _small_dense, tmp_path, strategy=strategy, engine=engine

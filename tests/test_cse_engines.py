@@ -1,11 +1,14 @@
-"""Engine equivalence for the batch-scored CSE rewrite (hypothesis-free).
+"""Engine equivalence for the CSE engines (hypothesis-free).
 
-The ``engine="batch"`` candidate-array engine and the ``engine="heap"``
-lazy max-heap engine realise the same selection rule (max priority,
-smallest-key tie-break, dormancy on failed implementation), so they must
-produce *identical* DAIS programs — not merely equal adder counts.
-These tests pin that contract, the batch delay scorer, and the
-compile_model fast path under the new default engine.
+The ``engine="batch"`` candidate-array engine, the ``engine="arena"``
+preallocated-workspace engine, and the ``engine="heap"`` lazy max-heap
+engine realise the same selection rule (max priority, smallest-key
+tie-break, dormancy on failed implementation), so they must produce
+*identical* DAIS programs — not merely equal adder counts.  These tests
+pin that contract over a seed x depth-budget x scoring-variant grid, the
+arena workspace reuse guarantee (second solve: zero reallocations), the
+batch delay scorer, and the compile_model fast path under the default
+engine.
 """
 
 import numpy as np
@@ -13,6 +16,10 @@ import pytest
 
 from repro.core import min_tree_depth_hist, solve_cmvm
 from repro.core.cost import min_tree_depth_hist_batch
+from repro.core.cse import CSEArena, get_thread_arena
+from repro.flow import SolverConfig
+
+ENGINES = ("heap", "batch", "arena")
 
 
 def _mat(m, seed, bw=8):
@@ -29,24 +36,53 @@ CASES = [
     (16, 44, 0),
 ]
 
+# scoring-rule variants exercised by the full engine grid: default,
+# unweighted counts, and no assembly dedup
+VARIANTS = [
+    {"weighted": True, "dedup": True},
+    {"weighted": False, "dedup": True},
+    {"weighted": True, "dedup": False},
+]
+
 
 def _program_arrays(sol):
     return sol.program.to_arrays()
 
 
+def _assert_programs_identical(sols, ctx=""):
+    ref = _program_arrays(sols[0])
+    for sol in sols[1:]:
+        arr = _program_arrays(sol)
+        for key in ("rows", "outputs", "n_inputs"):
+            np.testing.assert_array_equal(
+                ref[key], arr[key], err_msg=f"{key} diverged {ctx}"
+            )
+
+
 @pytest.mark.parametrize("m,seed,dc", CASES)
 def test_engines_produce_identical_programs(m, seed, dc):
     mat = _mat(m, seed)
-    batch = solve_cmvm(mat, dc=dc, engine="batch")
-    heap = solve_cmvm(mat, dc=dc, engine="heap")
-    assert batch.verify() and heap.verify()
-    a, b = _program_arrays(batch), _program_arrays(heap)
-    for key in ("rows", "outputs", "n_inputs"):
-        np.testing.assert_array_equal(a[key], b[key], err_msg=f"{key} diverged")
-    assert batch.n_adders == heap.n_adders
-    assert batch.cost_bits == heap.cost_bits
-    assert batch.stats["engine"] == "batch"
-    assert heap.stats["engine"] == "heap"
+    sols = {
+        eng: solve_cmvm(mat, config=SolverConfig(dc=dc, engine=eng))
+        for eng in ENGINES
+    }
+    assert all(s.verify() for s in sols.values())
+    _assert_programs_identical(list(sols.values()), f"(m={m} seed={seed} dc={dc})")
+    assert len({s.n_adders for s in sols.values()}) == 1
+    assert len({s.cost_bits for s in sols.values()}) == 1
+    for eng, s in sols.items():
+        assert s.stats["engine"] == eng
+
+
+@pytest.mark.parametrize("variant", VARIANTS, ids=["default", "unweighted", "nodedup"])
+@pytest.mark.parametrize("m,seed,dc", [(10, 5, 0), (12, 7, 2), (14, 9, -1)])
+def test_engine_grid_with_scoring_variants(m, seed, dc, variant):
+    """heap x batch x arena bit-identity across scoring-rule variants."""
+    mat = _mat(m, seed)
+    cfgs = [SolverConfig(dc=dc, engine=eng, **variant) for eng in ENGINES]
+    sols = [solve_cmvm(mat, config=c) for c in cfgs]
+    assert sols[0].verify()
+    _assert_programs_identical(sols, f"(m={m} seed={seed} dc={dc} {variant})")
 
 
 def test_engines_identical_on_rectangular_and_sparse():
@@ -54,17 +90,103 @@ def test_engines_identical_on_rectangular_and_sparse():
     mat = rng.integers(-(2**7), 2**7, size=(24, 6))
     mat[rng.random(mat.shape) < 0.5] = 0
     for dc in (-1, 2):
-        a = solve_cmvm(mat, dc=dc, engine="batch")
-        b = solve_cmvm(mat, dc=dc, engine="heap")
-        assert a.verify()
-        np.testing.assert_array_equal(
-            _program_arrays(a)["rows"], _program_arrays(b)["rows"]
-        )
+        sols = [
+            solve_cmvm(mat, config=SolverConfig(dc=dc, engine=eng))
+            for eng in ENGINES
+        ]
+        assert sols[0].verify()
+        _assert_programs_identical(sols, f"(sparse dc={dc})")
 
 
 def test_unknown_engine_rejected():
     with pytest.raises(ValueError, match="engine"):
         solve_cmvm(_mat(4, 0), engine="quantum")
+
+
+# ----------------------------------------------------------------------
+# Arena workspace reuse
+# ----------------------------------------------------------------------
+def test_arena_reuse_zero_reallocations():
+    """Two consecutive solves on one (thread) arena produce identical
+    programs, and the second performs zero arena reallocations — the hot
+    loop runs entirely inside buffers grown by the first solve."""
+    mat = _mat(20, 21)
+    cfg = SolverConfig(dc=-1, engine="arena")
+    arena = get_thread_arena()
+    first = solve_cmvm(mat, config=cfg)
+    solves_before = arena.n_solves
+    reallocs_before = arena.n_reallocs
+    second = solve_cmvm(mat, config=cfg)
+    assert arena.n_solves > solves_before, "solve did not use the thread arena"
+    assert arena.n_reallocs == reallocs_before, (
+        f"repeat solve reallocated {arena.n_reallocs - reallocs_before} buffers"
+    )
+    _assert_programs_identical([first, second], "(arena reuse)")
+    assert first.verify()
+
+
+def test_arena_explicit_workspace_and_busy_fallback():
+    """An explicitly passed arena is used (and reusable), and a busy
+    arena falls back to a private workspace instead of corrupting
+    state."""
+    from repro.core.cse import CSE
+    from repro.core.dais import DAISProgram
+    from repro.core.fixed_point import QInterval
+
+    arena = CSEArena()
+    mat = _mat(8, 5)
+    prog = DAISProgram()
+    rows = [prog.add_input(QInterval.from_fixed(True, 8, 8)) for _ in range(8)]
+    cols = [
+        {rows[i]: int(mat[i, j]) for i in range(8) if mat[i, j]}
+        for j in range(8)
+    ]
+    cse = CSE(prog, cols, engine="arena", arena=arena)
+    assert arena.busy  # acquired at construction
+    # a second arena CSE while the first is live must not steal the arena
+    prog2 = DAISProgram()
+    rows2 = [prog2.add_input(QInterval.from_fixed(True, 8, 8)) for _ in range(8)]
+    cols2 = [
+        {rows2[i]: int(mat[i, j]) for i in range(8) if mat[i, j]}
+        for j in range(8)
+    ]
+    cse2 = CSE(prog2, cols2, engine="arena", arena=arena)
+    assert cse2.arena is not arena
+    cse2.run()
+    cse.run()
+    assert not arena.busy  # released at the end of run()
+    assert arena.n_solves == 1
+
+
+def test_arena_reclaimed_from_dead_owner():
+    """A CSE that dies without running (failed construction, abandoned
+    object) must not wedge its arena: the weakref'd owner lets the next
+    acquire reclaim it."""
+    import gc
+
+    from repro.core.cse import CSE
+    from repro.core.dais import DAISProgram
+    from repro.core.fixed_point import QInterval
+
+    arena = CSEArena()
+    prog = DAISProgram()
+    rows = [prog.add_input(QInterval.from_fixed(True, 8, 8)) for _ in range(2)]
+    cse = CSE(prog, [{rows[0]: 3, rows[1]: 5}], engine="arena", arena=arena)
+    assert arena.busy
+    del cse, prog
+    gc.collect()
+    assert arena.busy  # not released, owner just died
+    mat = _mat(6, 2)
+    prog2 = DAISProgram()
+    rows2 = [prog2.add_input(QInterval.from_fixed(True, 8, 8)) for _ in range(6)]
+    cols2 = [
+        {rows2[i]: int(mat[i, j]) for i in range(6) if mat[i, j]}
+        for j in range(6)
+    ]
+    cse2 = CSE(prog2, cols2, engine="arena", arena=arena)
+    assert cse2.arena is arena  # reclaimed, not a private fallback
+    cse2.run()
+    assert not arena.busy
 
 
 def test_batch_depth_scorer_matches_scalar():
@@ -82,8 +204,9 @@ def test_batch_depth_scorer_matches_scalar():
 
 
 def test_compile_model_parallel_bit_identical_default_engine():
-    """jobs=N must stay bit-identical to serial under the default (batch)
-    engine, and engine="heap" must produce the same integers."""
+    """jobs=N (thread pool) must stay bit-identical to serial under the
+    default (batch) engine, and engine="heap"/"arena" must produce the
+    same integers.  The serial path records its pool fallback reason."""
     jax = pytest.importorskip("jax")
     from repro.nn import QuantConfig, compile_model, init_params
     from repro.nn.layers import QDense, ReLU, Sequential
@@ -101,12 +224,25 @@ def test_compile_model_parallel_bit_identical_default_engine():
     serial = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1)
     par = compile_model(model, params, in_shape, in_quant, dc=2, jobs=2)
     heap = compile_model(model, params, in_shape, in_quant, dc=2, jobs=1, engine="heap")
+    arena = compile_model(
+        model, params, in_shape, in_quant, dc=2, jobs=2, engine="arena"
+    )
     assert serial.solver_stats["engine"] == "batch"
     assert heap.solver_stats["engine"] == "heap"
+    assert arena.solver_stats["engine"] == "arena"
+    # the serial compile went serial for a *recorded* reason; the pooled
+    # compile either ran the pool or says why not
+    assert serial.solver_stats["pool_fallback"] == "jobs=1"
+    if par.solver_stats["n_pool_solves"]:
+        assert par.solver_stats["pool_fallback"] is None
+    else:
+        assert par.solver_stats["pool_fallback"] is not None
     rng = np.random.default_rng(3)
     q = in_quant.qint
     xi = np.asarray(rng.integers(q.lo, q.hi + 1, size=(16, *in_shape)), np.int32)
     y_serial = np.asarray(serial.forward_int(xi))
     np.testing.assert_array_equal(y_serial, np.asarray(par.forward_int(xi)))
     np.testing.assert_array_equal(y_serial, np.asarray(heap.forward_int(xi)))
+    np.testing.assert_array_equal(y_serial, np.asarray(arena.forward_int(xi)))
     assert [r.adders for r in serial.reports] == [r.adders for r in heap.reports]
+    assert [r.adders for r in serial.reports] == [r.adders for r in arena.reports]

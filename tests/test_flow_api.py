@@ -158,7 +158,7 @@ def test_compile_model_rejects_mixed_spelling(tiny):
 
 
 @pytest.mark.parametrize("strategy", ["da", "latency"])
-@pytest.mark.parametrize("engine", ["batch", "heap"])
+@pytest.mark.parametrize("engine", ["batch", "heap", "arena"])
 def test_flow_compile_bit_identical_to_legacy_kwargs(tiny, strategy, engine):
     """The acceptance grid: old kwargs vs Flow.compile(config=) produce
     bit-identical DAIS programs, steps, reports, and artifacts."""
@@ -283,3 +283,32 @@ def test_solver_digest_partitions_cache():
     assert not a.stats.get("cache_hit") and not b.stats.get("cache_hit")
     hot = solve_cmvm(m, config=SolverConfig(dc=2), cache=cache)
     assert hot.stats.get("cache_hit")
+
+
+def test_engine_in_digest_and_cache_keys():
+    """Every engine has its own config digest, hence its own solution-
+    cache key — a heap-solved entry never masquerades as an arena one —
+    and the legacy ``engine=`` kwarg shim accepts "arena"."""
+    engines = ("batch", "heap", "arena")
+    digests = {SolverConfig(dc=2, engine=e).digest() for e in engines}
+    assert len(digests) == len(engines)
+    m = _mat(6, 5, seed=9)
+    qin = [QInterval.from_fixed(True, 8, 8)] * 6
+    keys = {
+        config_solve_key(m, qin, [0] * 6, SolverConfig(dc=2, engine=e))
+        for e in engines
+    }
+    assert len(keys) == len(engines)
+    # end-to-end: one cache, three engines -> three distinct entries
+    cache = SolutionCache()
+    for e in engines:
+        s = solve_cmvm(m, config=SolverConfig(dc=2, engine=e), cache=cache)
+        assert not s.stats.get("cache_hit")
+    assert cache.stats.puts == len(engines)
+    # legacy spelling accepts the new engine (deprecated but equivalent)
+    with pytest.warns(DeprecationWarning):
+        legacy = solve_cmvm(m, dc=2, engine="arena")
+    cfg_sol = solve_cmvm(m, config=SolverConfig(dc=2, engine="arena"))
+    np.testing.assert_array_equal(
+        legacy.program.to_arrays()["rows"], cfg_sol.program.to_arrays()["rows"]
+    )

@@ -147,3 +147,35 @@ def test_stats_shape(designs):
     for k in ("p50_ms", "p95_ms", "p99_ms", "mean_ms", "throughput_rps"):
         assert np.isfinite(s[k]) and s[k] >= 0
     assert s["buckets"][-1] == 8
+
+
+def test_stats_bucket_histograms(designs):
+    """Per-bucket hit histogram and jit-compile counts: warmup compiles
+    every bucket, dispatched batches land in exactly one bucket each,
+    and the totals reconcile with n_batches."""
+    with ServeEngine(max_batch=8, max_wait_us=100.0) as eng:
+        eng.register("a", designs["a"])
+        s0 = eng.stats("a")
+        # fresh runner: nothing hit, nothing compiled yet
+        assert s0["bucket_hits"] == {1: 0, 2: 0, 4: 0, 8: 0}
+        assert s0["jit_compiles"] == {1: 0, 2: 0, 4: 0, 8: 0}
+        assert s0["n_jit_compiles"] == 0
+        eng.warmup("a")
+        s1 = eng.stats("a")
+        # warmup compiles every bucket shape but dispatches no batches
+        assert s1["jit_compiles"] == {1: 1, 2: 1, 4: 1, 8: 1}
+        assert s1["n_jit_compiles"] == 4
+        assert sum(s1["bucket_hits"].values()) == 0
+        # a lone request is a 1-element batch -> bucket 1, exactly once
+        eng.submit("a", _samples(1, seed=3)[0]).result(30)
+        s2 = eng.stats("a")
+        assert s2["bucket_hits"][1] == 1
+        assert sum(s2["bucket_hits"].values()) == 1
+        # a burst: every dispatched batch lands in exactly one bucket
+        for f in eng.submit_batch("a", _samples(20, seed=4)):
+            f.result(30)
+        s3 = eng.stats("a")
+        assert sum(s3["bucket_hits"].values()) == s3["n_batches"]
+        assert set(s3["bucket_hits"]) == {1, 2, 4, 8}
+        # compiles never exceed one per bucket shape (jit caches by shape)
+        assert all(c <= 1 for c in s3["jit_compiles"].values())
