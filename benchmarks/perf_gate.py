@@ -1,5 +1,15 @@
-"""Perf-trajectory gate: compare a fresh ``solver_smoke`` JSON against
-the committed baseline (``BENCH_solver.json`` at the repo root).
+"""Perf-trajectory gate: compare a fresh bench JSON against the
+committed baseline at the repo root.
+
+Two kinds (``--kind``):
+
+  * ``solver`` (default) — ``solver_smoke`` vs ``BENCH_solver.json``;
+  * ``serve``  — ``serve_load`` vs ``BENCH_serve.json``: correctness
+    booleans (bit-exact artifact, zero solves on load, rollout ok,
+    per-shard counter consistency, p99 SLO) are deterministic failures;
+    throughput must not drop more than ``tolerance`` below baseline and
+    p99 must not exceed baseline by more than ``tolerance`` (with a
+    ``--p99-floor-ms`` noise floor for shared runners).
 
 Two classes of check:
 
@@ -21,6 +31,8 @@ Usage::
 
     python -m benchmarks.perf_gate --fresh solver-smoke.json \
         [--baseline BENCH_solver.json] [--tolerance 0.2] [--floor-s 2.0]
+    python -m benchmarks.perf_gate --kind serve --fresh serve.json \
+        [--baseline BENCH_serve.json] [--tolerance 0.5] [--p99-floor-ms 50]
 
 Exit code 1 on any violation; prints one line per comparison.
 """
@@ -113,12 +125,81 @@ def _ratio_check(fresh: dict, baseline: dict, fi: dict, bi: dict,
     return out
 
 
+def compare_serve(fresh: dict, baseline: dict, tolerance: float = 0.5,
+                  p99_floor_ms: float = 50.0) -> list[str]:
+    """Serve-load gate: correctness booleans are deterministic failures;
+    throughput / p99 drift is bounded by ``tolerance`` (with a p99 noise
+    floor — sub-floor tails on shared runners are all scheduler noise).
+
+    Returns a list of violation messages (empty = gate passes).
+    """
+    violations: list[str] = []
+    art = fresh.get("artifact", {})
+    checks = [
+        ("sustained", fresh.get("sustained", False),
+         f"throughput below its own min_rps={fresh.get('min_rps')}"),
+        ("slo_ok", fresh.get("slo_ok", False),
+         f"p99 {fresh.get('p99_ms', float('nan')):.3f}ms over SLO "
+         f"{fresh.get('slo_p99_ms')}ms"),
+        ("shard_consistency", fresh.get("shard_consistency", False),
+         "per-shard sum(bucket_hits) != n_batches"),
+        ("artifact.bit_exact", art.get("bit_exact", False),
+         "artifact round-trip not bit-exact"),
+        ("artifact.n_solves_on_load", art.get("n_solves_on_load", -1) == 0,
+         f"cold start performed {art.get('n_solves_on_load')} solves"),
+        ("rollout.ok", fresh.get("rollout", {}).get("ok", False),
+         "rollout under traffic failed"),
+    ]
+    for name, ok, why in checks:
+        status = "ok" if ok else "FAIL"
+        print(f"serve/{name}: {status}")
+        if not ok:
+            violations.append(f"serve/{name}: {why} (deterministic)")
+
+    f_rps, b_rps = fresh.get("achieved_rps"), baseline.get("achieved_rps")
+    if f_rps is not None and b_rps:
+        limit = b_rps / (1.0 + tolerance)
+        status = "ok" if f_rps >= limit else "REGRESSION"
+        print(
+            f"serve/throughput: {f_rps:.0f} rps vs baseline {b_rps:.0f} "
+            f"(limit {limit:.0f}) {status}"
+        )
+        if f_rps < limit:
+            violations.append(
+                f"serve/throughput: {f_rps:.0f} rps under {limit:.0f} "
+                f"(> {tolerance:.0%} below baseline)"
+            )
+    f_p99, b_p99 = fresh.get("p99_ms"), baseline.get("p99_ms")
+    if f_p99 is not None and b_p99 is not None:
+        limit = max(b_p99 * (1.0 + tolerance), p99_floor_ms)
+        status = "ok" if f_p99 <= limit else "REGRESSION"
+        print(
+            f"serve/p99: {f_p99:.3f}ms vs baseline {b_p99:.3f}ms "
+            f"(limit {limit:.3f}ms) {status}"
+        )
+        if f_p99 > limit:
+            violations.append(
+                f"serve/p99: {f_p99:.3f}ms exceeds {limit:.3f}ms "
+                f"(> {tolerance:.0%} over baseline)"
+            )
+    return violations
+
+
+_DEFAULT_BASELINES = {
+    "solver": "BENCH_solver.json",
+    "serve": "BENCH_serve.json",
+}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--fresh", required=True, help="fresh solver_smoke JSON")
+    ap.add_argument("--fresh", required=True, help="fresh bench JSON")
+    ap.add_argument("--kind", choices=("solver", "serve"), default="solver",
+                    help="which bench family the JSONs belong to")
     ap.add_argument(
-        "--baseline", default=str(REPO_ROOT / "BENCH_solver.json"),
-        help="committed baseline JSON (default: repo-root BENCH_solver.json)",
+        "--baseline", default=None,
+        help="committed baseline JSON (default: repo-root "
+             "BENCH_solver.json / BENCH_serve.json per --kind)",
     )
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed relative slowdown (default 0.2 = 20%%)")
@@ -129,19 +210,29 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio-tolerance", type=float, default=None,
                     help="allowed slowdown of the gate-engine-vs-batch "
                          "same-run ratio (machine-independent; default "
-                         "tolerance + 0.2)")
+                         "tolerance + 0.2; solver kind only)")
+    ap.add_argument("--p99-floor-ms", type=float, default=50.0,
+                    help="never fail a serve p99 under this many ms "
+                         "(noise floor; serve kind only)")
     args = ap.parse_args(argv)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
-    baseline_path = Path(args.baseline)
+    baseline_path = Path(
+        args.baseline or REPO_ROOT / _DEFAULT_BASELINES[args.kind]
+    )
     if not baseline_path.exists():
         print(f"no baseline at {baseline_path}: nothing to gate against")
         return 0
     with open(baseline_path) as fh:
         baseline = json.load(fh)
-    violations = compare(
-        fresh, baseline, args.tolerance, args.floor_s, args.ratio_tolerance
-    )
+    if args.kind == "serve":
+        violations = compare_serve(
+            fresh, baseline, args.tolerance, args.p99_floor_ms
+        )
+    else:
+        violations = compare(
+            fresh, baseline, args.tolerance, args.floor_s, args.ratio_tolerance
+        )
     for v in violations:
         print(f"FAIL: {v}", file=sys.stderr)
     if not violations:

@@ -4,7 +4,8 @@ End-to-end exercise of the ``repro.flow`` deployment path: compile a
 32x32 8-bit CMVM model with ``Flow.compile``, round-trip it through the
 ``design.save`` / ``Flow.load`` artifact (verifying bit-exactness and
 that the cold start performs **zero** CMVM solves), register the loaded
-design as version 1 of a :class:`Deployment`, and drive it with a load
+design as version 1 of a :class:`Deployment` running the **sharded**
+dispatch path (``ServeConfig.shards``), and drive it with a load
 generator:
 
   closed loop   N workers, each submit -> wait -> repeat (throughput =
@@ -17,19 +18,27 @@ After the measured phase the bench exercises a **version rollout** under
 traffic: a window of in-flight v1 requests is submitted (via
 ``submit_batch``), v2 is registered — atomic alias flip, v1 drained —
 and the bench asserts the in-flight futures completed and that post-
-rollout traffic is served by v2.
+rollout traffic is served by v2.  With ``compare_single`` (default) a
+second measured phase repeats the load on a one-shard deployment, so
+the report carries the sharded-vs-single-dispatcher speedup on the same
+machine.
 
 Prints the usual ``name,us_per_call,derived`` CSV and writes a
 ``BENCH_serve.json``-compatible report (``--json PATH``) with achieved
-throughput, p50/p95/p99 latency, batch occupancy, artifact timings, and
-the rollout result.  Exit code 1 if the engine cannot sustain
-``min_rps``, the artifact round-trip is not bit-exact, or the rollout
-fails.
+throughput, p50/p95/p99 latency, per-stage latency accounting (queue
+wait / batch-form / pad / dispatch / copy-out), per-shard counter
+consistency, batch occupancy, artifact timings, the rollout result, and
+the single-dispatcher reference.  Exit code 1 if the engine cannot
+sustain ``min_rps``, p99 exceeds the ``slo_p99_ms`` SLO, per-shard
+counters do not reconcile, the artifact round-trip is not bit-exact, or
+the rollout fails.  The committed repo-root ``BENCH_serve.json`` is the
+trajectory baseline compared by ``benchmarks/perf_gate.py --kind serve``.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 import tempfile
 import threading
@@ -92,14 +101,18 @@ def _compile_and_roundtrip(m, w_bits, tmpdir, seed=0):
     return loaded, loaded_v2, in_shape, in_quant, compile_s, artifact
 
 
-def _closed_loop(engine, name, samples, duration_s, workers, window):
+def _closed_loop(engine, name, samples, duration_s, workers, window,
+                 batch_submit: int = 0):
     """Fixed-concurrency load: ``workers`` generator threads, each with
     ``window`` requests in flight (total concurrency workers*window).
 
     Pipelining matters: with a window, ``result()`` usually pops an
     already-completed future, so a generator thread is only descheduled
     when the whole window is pending — per-request thread wakeups (the
-    throughput ceiling of a submit->wait->repeat loop) disappear.
+    throughput ceiling of a submit->wait->repeat loop) disappear.  With
+    ``batch_submit`` > 1 the generators refill their window through
+    ``submit_batch`` chunks of that size (clients that already hold
+    several requests), exercising the amortized slab write path.
     """
     stop_t = time.perf_counter() + duration_s
     counts = [0] * workers
@@ -111,9 +124,17 @@ def _closed_loop(engine, name, samples, duration_s, workers, window):
         n = 0
         k = len(samples)
         while time.perf_counter() < stop_t:
-            while len(dq) < window:
-                dq.append(engine.submit(name, samples[(i + n) % k]))
-                n += 1
+            if batch_submit > 1:
+                while len(dq) < window:
+                    chunk = [
+                        samples[(i + n + j) % k] for j in range(batch_submit)
+                    ]
+                    dq.extend(engine.submit_batch(name, chunk))
+                    n += batch_submit
+            else:
+                while len(dq) < window:
+                    dq.append(engine.submit(name, samples[(i + n) % k]))
+                    n += 1
             dq.popleft().result(30)
         for f in dq:
             f.result(30)
@@ -185,6 +206,61 @@ def _rollout_under_traffic(dep, v2_design, samples, duration_s=0.3):
     }
 
 
+def _shard_consistency(stats: dict) -> bool:
+    """Every shard's bucket histogram must reconcile with its own batch
+    count, and the aggregates must be the shard sums."""
+    shards = stats.get("shards", [])
+    per_shard = all(
+        sum(ss["bucket_hits"].values()) == ss["n_batches"] for ss in shards
+    )
+    agg = sum(stats["bucket_hits"].values()) == stats["n_batches"]
+    sums = stats["n_batches"] == sum(ss["n_batches"] for ss in shards)
+    return bool(per_shard and agg and sums)
+
+
+def _measure(design, mode, samples, duration_s, workers, window, target_rps,
+             max_batch, max_wait_us, shards, batch_submit, seed):
+    """One measured phase on a fresh deployment; returns the load + stats
+    summary (the deployment is shut down before returning)."""
+    from repro.flow import Flow, ServeConfig
+
+    dep = Flow.serve(
+        ServeConfig(max_batch=max_batch, max_wait_us=max_wait_us, shards=shards)
+    )
+    dep.register("bench", design)
+    warmup_s = dep.warmup("bench")
+    try:
+        if mode == "closed":
+            n_done, elapsed = _closed_loop(
+                dep, "bench", samples, duration_s, workers, window, batch_submit
+            )
+        elif mode == "open":
+            n_done, elapsed = _open_loop(
+                dep, "bench", samples, duration_s, target_rps, seed
+            )
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        stats = dep.stats("bench")
+    finally:
+        dep.shutdown()
+    achieved = n_done / elapsed if elapsed > 0 else 0.0
+    return {
+        "shards": shards,
+        "n_requests": n_done,
+        "achieved_rps": achieved,
+        "p50_ms": stats["p50_ms"],
+        "p95_ms": stats["p95_ms"],
+        "p99_ms": stats["p99_ms"],
+        "mean_ms": stats["mean_ms"],
+        "n_batches": stats["n_batches"],
+        "mean_batch_occupancy": stats["mean_batch_occupancy"],
+        "n_rejected": stats["n_rejected"],
+        "per_stage": stats["per_stage"],
+        "shard_consistency": _shard_consistency(stats),
+        "engine_warmup_s": warmup_s,
+    }
+
+
 def run(
     mode: str = "closed",
     m: int = 32,
@@ -196,6 +272,10 @@ def run(
     max_batch: int = 256,
     max_wait_us: float = 200.0,
     min_rps: float = 10_000.0,
+    shards: int = 4,
+    batch_submit: int = 16,
+    slo_p99_ms: float = 50.0,
+    compare_single: bool = True,
     seed: int = 0,
 ) -> dict:
     from repro.flow import Flow, ServeConfig
@@ -212,49 +292,73 @@ def run(
         for _ in range(256)
     ]
 
-    dep = Flow.serve(ServeConfig(max_batch=max_batch, max_wait_us=max_wait_us))
-    dep.register("bench", loaded)  # version 1
-    warmup_s = dep.warmup("bench")
+    # measured phase: the sharded dispatch path
+    sharded = _measure(
+        loaded, mode, samples, duration_s, workers, window, target_rps,
+        max_batch, max_wait_us, shards, batch_submit, seed,
+    )
+
+    # single-dispatcher reference on the same machine (shards=1, same
+    # workload): the denominator of the sharding speedup claim
+    single = None
+    if compare_single and shards > 1:
+        single = _measure(
+            loaded, mode, samples, duration_s, workers, window, target_rps,
+            max_batch, max_wait_us, 1, batch_submit, seed,
+        )
+
+    # rollout under traffic on a fresh sharded deployment
+    dep = Flow.serve(
+        ServeConfig(max_batch=max_batch, max_wait_us=max_wait_us, shards=shards)
+    )
+    dep.register("bench", loaded)
+    dep.warmup("bench")
     try:
-        if mode == "closed":
-            n_done, elapsed = _closed_loop(
-                dep, "bench", samples, duration_s, workers, window
-            )
-        elif mode == "open":
-            n_done, elapsed = _open_loop(
-                dep, "bench", samples, duration_s, target_rps, seed
-            )
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
-        stats = dep.stats("bench")
         rollout = _rollout_under_traffic(dep, loaded_v2, samples)
     finally:
         dep.shutdown()
 
-    achieved = n_done / elapsed if elapsed > 0 else 0.0
+    achieved = sharded["achieved_rps"]
+    slo_ok = bool(slo_p99_ms is None or sharded["p99_ms"] <= slo_p99_ms)
     return {
         "bench": "serve_load",
         "mode": mode,
+        # shard speedup is parallelism: it needs cores.  Recording the
+        # machine's core count makes a 1-core baseline's ~1.0x speedup
+        # self-explanatory next to a many-core run's larger one.
+        "n_cpus": os.cpu_count(),
         "m": m,
         "w_bits": w_bits,
         "duration_s": duration_s,
         "workers": workers if mode == "closed" else None,
         "window": window if mode == "closed" else None,
         "concurrency": workers * window if mode == "closed" else None,
+        "batch_submit": batch_submit if mode == "closed" else None,
         "target_rps": target_rps if mode == "open" else None,
-        "n_requests": n_done,
+        "shards": shards,
+        "n_requests": sharded["n_requests"],
         "achieved_rps": achieved,
         "min_rps": min_rps,
         "sustained": achieved >= min_rps,
-        "p50_ms": stats["p50_ms"],
-        "p95_ms": stats["p95_ms"],
-        "p99_ms": stats["p99_ms"],
-        "mean_ms": stats["mean_ms"],
-        "n_batches": stats["n_batches"],
-        "mean_batch_occupancy": stats["mean_batch_occupancy"],
-        "n_rejected": stats["n_rejected"],
+        "slo_p99_ms": slo_p99_ms,
+        "slo_ok": slo_ok,
+        "p50_ms": sharded["p50_ms"],
+        "p95_ms": sharded["p95_ms"],
+        "p99_ms": sharded["p99_ms"],
+        "mean_ms": sharded["mean_ms"],
+        "n_batches": sharded["n_batches"],
+        "mean_batch_occupancy": sharded["mean_batch_occupancy"],
+        "n_rejected": sharded["n_rejected"],
+        "per_stage": sharded["per_stage"],
+        "shard_consistency": sharded["shard_consistency"],
+        "single_dispatcher": single,
+        "shard_speedup": (
+            achieved / single["achieved_rps"]
+            if single and single["achieved_rps"] > 0
+            else None
+        ),
         "compile_s": compile_s,
-        "engine_warmup_s": warmup_s,
+        "engine_warmup_s": sharded["engine_warmup_s"],
         "artifact": artifact,
         "rollout": rollout,
     }
@@ -264,6 +368,8 @@ def passed(r: dict) -> bool:
     a = r["artifact"]
     return bool(
         r["sustained"]
+        and r["slo_ok"]
+        and r["shard_consistency"]
         and a["bit_exact"]
         and a["n_solves_on_load"] == 0
         and all(a["digests_match"])
@@ -275,11 +381,18 @@ def passed(r: dict) -> bool:
 def main(csv: bool = True, json_path=None, **kw) -> dict:
     r = run(**kw)
     if csv:
+        speedup = r["shard_speedup"]
+        speedup_field = (
+            f"speedup_vs_single={speedup:.2f};" if speedup is not None else ""
+        )
         print("name,us_per_call,derived")
         print(
-            f"serve_load_{r['mode']}_m{r['m']},{1e6 / max(r['achieved_rps'], 1e-9):.1f},"
-            f"rps={r['achieved_rps']:.0f};p50_ms={r['p50_ms']:.3f};"
-            f"p99_ms={r['p99_ms']:.3f};batches={r['n_batches']};"
+            f"serve_load_{r['mode']}_m{r['m']},"
+            f"{1e6 / max(r['achieved_rps'], 1e-9):.1f},"
+            f"rps={r['achieved_rps']:.0f};shards={r['shards']};"
+            f"{speedup_field}"
+            f"p50_ms={r['p50_ms']:.3f};p99_ms={r['p99_ms']:.3f};"
+            f"slo_ok={int(r['slo_ok'])};batches={r['n_batches']};"
             f"occupancy={r['mean_batch_occupancy']:.2f};"
             f"artifact_bit_exact={int(r['artifact']['bit_exact'])};"
             f"load_solves={r['artifact']['n_solves_on_load']};"
@@ -299,21 +412,39 @@ if __name__ == "__main__":
     args = sys.argv[1:]
     kw: dict = {}
     json_path = None
+
+    def _pop(flag, cast=float):
+        if flag in args:
+            k = args.index(flag)
+            val = cast(args[k + 1])
+            del args[k : k + 2]
+            return val
+        return None
+
     if "--json" in args:
         k = args.index("--json")
         json_path = args[k + 1]
         del args[k : k + 2]
-    if "--mode" in args:
-        k = args.index("--mode")
-        kw["mode"] = args[k + 1]
-        del args[k : k + 2]
-    if "--min-rps" in args:
-        k = args.index("--min-rps")
-        kw["min_rps"] = float(args[k + 1])
-        del args[k : k + 2]
-    if "--duration" in args:
-        k = args.index("--duration")
-        kw["duration_s"] = float(args[k + 1])
-        del args[k : k + 2]
+    v = _pop("--mode", str)
+    if v is not None:
+        kw["mode"] = v
+    v = _pop("--min-rps")
+    if v is not None:
+        kw["min_rps"] = v
+    v = _pop("--duration")
+    if v is not None:
+        kw["duration_s"] = v
+    v = _pop("--shards", int)
+    if v is not None:
+        kw["shards"] = v
+    v = _pop("--batch-submit", int)
+    if v is not None:
+        kw["batch_submit"] = v
+    v = _pop("--slo-p99-ms")
+    if v is not None:
+        kw["slo_p99_ms"] = v
+    if "--no-compare-single" in args:
+        args.remove("--no-compare-single")
+        kw["compare_single"] = False
     result = main(json_path=json_path, **kw)
     sys.exit(0 if passed(result) else 1)

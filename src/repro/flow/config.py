@@ -257,11 +257,15 @@ class ServeConfig(_ConfigBase):
 
     max_batch     largest microbatch (and largest jit shape bucket).
     max_wait_us   batching window after the first queued request.
-    queue_depth   bounded per-model request queue (backpressure limit).
+    queue_depth   bounded per-model request queue (backpressure limit;
+                  divided across shards).
     backpressure  "block" (submit waits for queue space) or "reject"
                   (submit raises / fails the future with QueueFullError).
     buckets       explicit batch-shape buckets (None: powers of two up
                   to max_batch); the largest bucket must cover max_batch.
+    shards        dispatch shards per model: each shard is one request
+                  queue + payload slab + dispatcher thread behind the
+                  shared submit path (1 = the single-dispatcher engine).
     """
 
     max_batch: int = 256
@@ -269,6 +273,7 @@ class ServeConfig(_ConfigBase):
     queue_depth: int = 8192
     backpressure: str = "block"
     buckets: Optional[tuple] = None
+    shards: int = 1
 
     def __post_init__(self) -> None:
         self._require(
@@ -286,6 +291,10 @@ class ServeConfig(_ConfigBase):
         self._require(
             self.backpressure in ("block", "reject"),
             f"backpressure must be 'block' or 'reject', got {self.backpressure!r}",
+        )
+        self._require(
+            isinstance(self.shards, int) and self.shards >= 1,
+            f"shards must be >= 1, got {self.shards}",
         )
         if self.buckets is not None:
             buckets = tuple(sorted(int(b) for b in self.buckets))

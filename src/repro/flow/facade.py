@@ -28,7 +28,7 @@ from typing import Optional, Union
 import numpy as np
 
 from ..nn.compiler import CompiledDesign, _compile_model
-from ..runtime.engine import ServeEngine
+from ..runtime.engine import EngineClosedError, ServeEngine
 from .config import CompileConfig, ServeConfig
 
 __all__ = ["Deployment", "Flow"]
@@ -221,13 +221,18 @@ class Deployment:
     def _on_active(self, name: str, call):
         """Resolve the alias and call the engine, re-resolving if the
         version was retired between the two steps (a submit racing a
-        rollout must land on the new version, not KeyError)."""
+        rollout must land on the new version, not KeyError — and a
+        submit that reached the old runner just as it closed gets
+        EngineClosedError from the engine, which is the same race one
+        step later, so it retries onto the new version too)."""
         for _ in range(8):
             key = self._active_key(name)
             try:
                 return call(key)
             except KeyError:
                 continue  # alias flipped and the old runner drained mid-call
+            except EngineClosedError:
+                continue  # runner grabbed just before its drain closed it
         raise KeyError(f"model {name!r}: active version kept changing; giving up")
 
     # -- serving (alias-resolved passthrough) --------------------------

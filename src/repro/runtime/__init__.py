@@ -7,15 +7,17 @@
 """
 
 from .artifact import FORMAT_NAME, FORMAT_VERSION, load_design, save_design
-from .engine import QueueFullError, ServeEngine
-from .metrics import LatencyRecorder, percentile
+from .engine import EngineClosedError, QueueFullError, ServeEngine
+from .metrics import LatencyRecorder, StageAccumulator, percentile
 
 __all__ = [
+    "EngineClosedError",
     "FORMAT_NAME",
     "FORMAT_VERSION",
     "LatencyRecorder",
     "QueueFullError",
     "ServeEngine",
+    "StageAccumulator",
     "load_design",
     "percentile",
     "save_design",

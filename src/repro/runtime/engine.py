@@ -1,4 +1,4 @@
-"""Microbatched serving engine for compiled DA designs.
+"""Sharded, microbatched serving engine for compiled DA designs.
 
 The deployment model of the paper (and hls4ml): a design is compiled
 once, then serves inference at fixed microsecond-scale latency.  This
@@ -6,26 +6,46 @@ engine is the software analogue of the always-ready FPGA datapath — a
 multi-model registry where each registered ``CompiledDesign`` (in-memory
 or cold-started from a ``save_design`` artifact) gets:
 
-  * a bounded request queue (backpressure: block or reject when full);
-  * a dispatcher thread that drains the queue into microbatches —
-    at most ``max_batch`` requests, waiting at most ``max_wait_us``
-    after the first — mirroring serve/engine.py's slot design;
-  * bucketed batch shapes (powers of two up to ``max_batch``) so the
-    jitted integer forward pass compiles once per bucket and every
-    batch is padded to the next bucket instead of a fresh shape;
-  * per-request latency accounting (submit -> result) with p50/p95/p99
-    and throughput in ``stats()``.
+  * N dispatch *shards* (``ServeConfig.shards``), each a bounded request
+    queue + dispatcher thread + preallocated payload slab; ``submit``
+    places requests round-robin across shards, ``submit_batch`` spreads
+    contiguous chunks, and the per-model ``queue_depth`` backpressure
+    budget is divided across shards;
+  * a payload **slab** per shard: submitters write samples straight into
+    a preallocated ring of slots and dispatchers gather whole batches
+    out of it with one vectorized copy into a bucket-shaped scratch
+    array — no per-request array allocations or per-request copies on
+    the dispatch path;
+  * microbatch formation per shard — at most ``max_batch`` requests,
+    waiting at most ``max_wait_us`` after the first — with bucketed
+    batch shapes (powers of two up to ``max_batch``) so the jitted
+    integer forward pass (shared by all shards) compiles once per
+    bucket and every batch is padded to the next bucket;
+  * per-request latency accounting (submit -> result, p50/p95/p99,
+    throughput) plus per-stage accounting (queue wait / batch-form /
+    pad / dispatch / copy-out) and per-shard counters, merged across
+    shards in ``stats()``.
 
 Requests are single samples on the integer input grid (``in_shape``,
 as ``CompiledDesign.forward_int`` consumes them); ``submit`` returns a
 ``concurrent.futures.Future`` resolving to the integer output.
+
+Shutdown discipline: every Future handed out is resolved — with a
+result while draining, or with :class:`EngineClosedError` once the
+model is closed.  The closed flag is checked *under the shard lock* on
+every enqueue, so a ``submit`` that grabbed a runner reference just
+before ``unregister``/``shutdown`` popped it either lands in the queue
+before the dispatcher's final drain (and is served) or observes the
+flag and fails fast — the put-after-final-sweep window that used to
+hang futures cannot occur.
 """
 
 from __future__ import annotations
 
-import queue
+import itertools
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from pathlib import Path
 from typing import Optional, Union
@@ -36,7 +56,7 @@ import numpy as np
 from ..flow.config import UNSET, ServeConfig, resolve_legacy
 from ..nn.compiler import CompiledDesign
 from .artifact import load_design
-from .metrics import LatencyRecorder
+from .metrics import LatencyRecorder, StageAccumulator
 
 
 def _serve_config_from_legacy(legacy: dict) -> ServeConfig:
@@ -52,11 +72,17 @@ class QueueFullError(RuntimeError):
     model's request queue is at capacity."""
 
 
-class _Request:
-    __slots__ = ("x", "t_submit", "future")
+class EngineClosedError(RuntimeError):
+    """Raised by ``submit`` (or set on a Future) when the request raced
+    ``unregister``/``shutdown``: the model's dispatchers are stopping or
+    gone, so the request is failed fast instead of queued forever."""
 
-    def __init__(self, x: np.ndarray, t_submit: float, future: Future):
-        self.x = x
+
+class _Request:
+    __slots__ = ("slot", "t_submit", "future")
+
+    def __init__(self, slot: int, t_submit: float, future: Future):
+        self.slot = slot
         self.t_submit = t_submit
         self.future = future
 
@@ -68,7 +94,252 @@ def _default_buckets(max_batch: int) -> tuple[int, ...]:
     return tuple(out)
 
 
-class _ModelRunner(threading.Thread):
+class _Shard(threading.Thread):
+    """One dispatch lane of a model: bounded request deque + payload
+    slab + dispatcher thread.
+
+    All shard state (deque, free-slot stack, counters) is guarded by one
+    lock; submitters copy their sample into a reserved slab slot while
+    holding it (the samples are small — the copy is cheaper than a
+    second lock round-trip), and the dispatcher drains a whole batch in
+    a single lock acquisition, then gathers the batch out of the slab
+    with one vectorized copy into a per-bucket scratch array.
+    """
+
+    def __init__(self, runner: "_ModelRunner", idx: int, depth: int):
+        super().__init__(
+            daemon=True, name=f"da4ml-serve-{runner.model_name}-s{idx}"
+        )
+        self.runner = runner
+        self.idx = idx
+        self.depth = depth
+        self.max_batch = runner.max_batch
+        self.max_wait_s = runner.max_wait_s
+        self.in_shape = runner.in_shape
+        self._fn = runner._fn
+        self._closed = runner._closed  # runner-wide: set first in stop()
+
+        # payload slab: depth queued + max_batch executing slots can be
+        # live at once; slots are recycled through a free-list stack
+        cap = depth + runner.max_batch
+        self.slab = np.empty((cap, *self.in_shape), np.int32)
+        self._free: list[int] = list(range(cap))
+        self._pending: deque[_Request] = deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        # bucket-shaped scratch: the gather target, reused every batch
+        # (safe: the jitted call's result is materialized before reuse)
+        self._scratch = {
+            b: np.zeros((b, *self.in_shape), np.int32) for b in runner.buckets
+        }
+
+        self.metrics = LatencyRecorder()
+        self.stage = StageAccumulator()
+        self.n_batches = 0
+        self.n_rejected = 0  # guarded by self._lock (shared with submitters)
+        self._occupancy_sum = 0.0
+        self.bucket_hits: dict[int, int] = {b: 0 for b in runner.buckets}
+        self._stop = threading.Event()
+        self._drained = threading.Event()
+
+    # -- enqueue (submitter threads) -----------------------------------
+    def _closed_error(self) -> EngineClosedError:
+        return EngineClosedError(
+            f"model {self.runner.model_name!r}: engine shut down"
+        )
+
+    def _full_error(self) -> QueueFullError:
+        return QueueFullError(
+            f"queue for model {self.runner.model_name!r} is full "
+            f"({self.depth} requests on shard {self.idx})"
+        )
+
+    def put_one(self, x: np.ndarray, t_submit: float, block: bool) -> Future:
+        fut: Future = Future()
+        with self._lock:
+            while True:
+                if self._closed.is_set():
+                    raise self._closed_error()
+                if self._free and len(self._pending) < self.depth:
+                    break
+                if not block:
+                    self.n_rejected += 1
+                    raise self._full_error()
+                # timed wait: re-checks the closed flag even if a racing
+                # stop() notified before we started waiting
+                self._not_full.wait(0.05)
+            slot = self._free.pop()
+            self.slab[slot] = x
+            self._pending.append(_Request(slot, t_submit, fut))
+            self._not_empty.notify()
+        return fut
+
+    def put_many(self, xs: list, t_submit: float, block: bool) -> list[Future]:
+        """Enqueue a chunk under one lock acquisition.  With the reject
+        policy, overflowing samples' futures are *failed* with
+        :class:`QueueFullError` (and counted) instead of raising; if the
+        shard closes mid-chunk the remaining futures are failed with
+        :class:`EngineClosedError` — every returned Future resolves."""
+        futs: list[Future] = [Future() for _ in xs]
+        i, n = 0, len(xs)
+        with self._lock:
+            while i < n:
+                if self._closed.is_set():
+                    break
+                space = min(len(self._free), self.depth - len(self._pending))
+                if space <= 0:
+                    if not block:
+                        self.n_rejected += 1
+                        f = futs[i]
+                        if f.set_running_or_notify_cancel():
+                            f.set_exception(self._full_error())
+                        i += 1
+                        continue
+                    self._not_full.wait(0.05)
+                    continue
+                for j in range(i, min(i + space, n)):
+                    slot = self._free.pop()
+                    self.slab[slot] = xs[j]
+                    self._pending.append(_Request(slot, t_submit, futs[j]))
+                i = min(i + space, n)
+                self._not_empty.notify()
+        for j in range(i, n):  # chunk tail cut off by a racing shutdown
+            f = futs[j]
+            if f.set_running_or_notify_cancel():
+                f.set_exception(self._closed_error())
+        return futs
+
+    # -- dispatcher ----------------------------------------------------
+    def run(self) -> None:
+        while True:
+            batch, t_first = self._collect()
+            if batch:
+                self._execute(batch, t_first)
+            elif self._stop.is_set():
+                break
+        self._fail_pending()
+        self._drained.set()
+
+    def _collect(self) -> tuple[list[_Request], float]:
+        with self._lock:
+            while not self._pending:
+                if self._stop.is_set():
+                    return [], 0.0
+                self._not_empty.wait(0.05)
+            t_first = time.perf_counter()
+            if len(self._pending) < self.max_batch and not self._stop.is_set():
+                deadline = t_first + self.max_wait_s
+                while len(self._pending) < self.max_batch:
+                    rem = deadline - time.perf_counter()
+                    if rem <= 0 or self._stop.is_set():
+                        break
+                    self._not_empty.wait(min(rem, 0.02))
+            n = min(len(self._pending), self.max_batch)
+            batch = [self._pending.popleft() for _ in range(n)]
+            self._not_full.notify_all()
+            return batch, t_first
+
+    def _free_slots(self, slots: list) -> None:
+        with self._lock:
+            self._free.extend(slots)
+            self._not_full.notify_all()
+
+    def _fail_pending(self) -> None:
+        """Fail any requests still queued once the dispatcher is gone
+        (e.g. the drain timed out) instead of leaving their futures to
+        hang until the client's result() timeout."""
+        with self._lock:
+            reqs = list(self._pending)
+            self._pending.clear()
+            self._free.extend(r.slot for r in reqs)
+            self._not_full.notify_all()
+        for r in reqs:
+            if r.future.set_running_or_notify_cancel():
+                r.future.set_exception(self._closed_error())
+
+    def _bucket(self, n: int) -> int:
+        for b in self.runner.buckets:
+            if b >= n:
+                return b
+        return self.runner.buckets[-1]
+
+    def _execute(self, batch: list[_Request], t_first: float) -> None:
+        t_formed = time.perf_counter()
+        # claim the futures; drop any the client cancelled while queued
+        claimed = [r for r in batch if r.future.set_running_or_notify_cancel()]
+        self.stage.add("batch_form", t_formed - t_first)
+        slots = [r.slot for r in batch]
+        if not claimed:
+            self._free_slots(slots)
+            return
+        self.stage.add(
+            "queue_wait",
+            sum(t_formed - r.t_submit for r in claimed),
+            len(claimed),
+        )
+        n = len(claimed)
+        b = self._bucket(n)
+        x = self._scratch[b]
+        try:
+            try:
+                x[:n] = self.slab[[r.slot for r in claimed]]
+                if n < b:
+                    x[n:] = 0
+            finally:
+                self._free_slots(slots)  # slots recycle even on failure
+            t_pad = time.perf_counter()
+            self.stage.add("pad", t_pad - t_formed)
+            y = np.asarray(self._fn(x))
+        except Exception as e:  # resolve futures instead of killing the thread
+            for r in claimed:
+                r.future.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        self.stage.add("dispatch", t_done - t_pad)
+        lats = []
+        for i, r in enumerate(claimed):
+            r.future.set_result(y[i])
+            lats.append(t_done - r.t_submit)
+        self.metrics.record_many(lats, t_done)
+        self.n_batches += 1
+        # counted only on success, keeping sum(bucket_hits) == n_batches
+        self.bucket_hits[b] += 1
+        jc = self.runner.jit_compiles
+        if not jc[b]:
+            jc[b] = 1  # first dispatch of this shape compiled (any shard)
+        self._occupancy_sum += n / b
+        self.stage.add("copy_out", time.perf_counter() - t_done)
+
+    # -- control -------------------------------------------------------
+    def initiate_stop(self) -> None:
+        self._stop.set()
+        with self._lock:
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            qsize = len(self._pending)
+            n_rejected = self.n_rejected
+        n_batches = self.n_batches
+        return {
+            "shard": self.idx,
+            "n_batches": n_batches,
+            "n_rejected": n_rejected,
+            "n_requests": self.metrics.n_total,
+            "queue_depth": qsize,
+            "mean_batch_occupancy": (
+                self._occupancy_sum / n_batches if n_batches else 0.0
+            ),
+            "bucket_hits": {int(b): int(c) for b, c in self.bucket_hits.items()},
+            "per_stage": self.stage.snapshot(),
+        }
+
+
+class _ModelRunner:
+    """One registered model: shared jitted forward + N dispatch shards."""
+
     def __init__(
         self,
         name: str,
@@ -77,8 +348,8 @@ class _ModelRunner(threading.Thread):
         queue_depth: int,
         max_wait_us: float,
         buckets: Optional[tuple[int, ...]],
+        shards: int = 1,
     ):
-        super().__init__(daemon=True, name=f"da4ml-serve-{name}")
         self.model_name = name
         self.design = design
         self.max_batch = max_batch
@@ -87,155 +358,114 @@ class _ModelRunner(threading.Thread):
         if self.buckets[-1] < max_batch:
             raise ValueError("largest bucket must cover max_batch")
         self.in_shape = tuple(design.in_shape)
-        self.q: queue.Queue[_Request] = queue.Queue(queue_depth)
-        self.metrics = LatencyRecorder()
-        self.n_batches = 0
-        self.n_rejected = 0
-        self._occupancy_sum = 0.0
-        # serving-perf observability: how often each bucket shape is
-        # dispatched, and which bucket shapes have been jit-compiled.
-        # jit caches per shape for a fixed design, so each flag is 0/1 —
-        # a bookkeeping mirror of "first dispatch or warmup touched this
-        # bucket", not an XLA retrace counter.  Without an up-front
-        # warmup, flags flipping mid-traffic are exactly the requests
-        # that paid a compile in their latency.
-        self.bucket_hits: dict[int, int] = {b: 0 for b in self.buckets}
-        self.jit_compiles: dict[int, int] = {b: 0 for b in self.buckets}
         self._fn = jax.jit(design.forward_int)
-        self._stop = threading.Event()
-        self._drained = threading.Event()
+        # which bucket shapes have been jit-compiled (0/1 per bucket;
+        # jax caches per shape for a fixed design, and the jitted fn is
+        # shared by every shard).  A flag is set only *after* a trace
+        # actually completed — warmup or first dispatch — so a warmup
+        # that raises mid-loop never reports untraced buckets as
+        # compiled.  Without an up-front warmup, flags flipping
+        # mid-traffic are exactly the requests that paid a compile.
+        self.jit_compiles: dict[int, int] = {b: 0 for b in self.buckets}
+        self.n_shards = max(1, int(shards))
+        # the per-model queue_depth backpressure budget is divided
+        # across shards (ceil, so capacity never shrinks below it)
+        depth = -(-queue_depth // self.n_shards)
+        self._closed = threading.Event()
+        self.shards = [_Shard(self, i, depth) for i in range(self.n_shards)]
+        self._rr = itertools.count()  # round-robin placement cursor
 
-    # -- dispatcher ----------------------------------------------------
-    def run(self) -> None:
-        while True:
-            batch = self._collect()
-            if batch:
-                self._execute(batch)
-            elif self._stop.is_set():
-                break
-        self._fail_pending()
-        self._drained.set()
+    def start(self) -> None:
+        for sh in self.shards:
+            sh.start()
 
-    def _collect(self) -> list[_Request]:
-        try:
-            first = self.q.get(timeout=0.02)
-        except queue.Empty:
-            return []
-        batch = [first]
-        deadline = time.perf_counter() + self.max_wait_s
-        while len(batch) < self.max_batch:
-            try:
-                # drain whatever is queued; when empty, block (GIL
-                # released, in <=20ms slices so stop() is honored even
-                # under a long batching window) instead of spinning
-                # against the submitter threads
-                batch.append(self.q.get_nowait())
-                continue
-            except queue.Empty:
-                pass
-            rem = deadline - time.perf_counter()
-            if rem <= 0 or self._stop.is_set():
-                break
-            try:
-                batch.append(self.q.get(timeout=min(rem, 0.02)))
-            except queue.Empty:
-                pass
-        return batch
+    # -- serving -------------------------------------------------------
+    def submit_one(self, x: np.ndarray, t_submit: float, block: bool) -> Future:
+        sh = self.shards[next(self._rr) % self.n_shards]
+        return sh.put_one(x, t_submit, block)
 
-    def _fail_pending(self) -> None:
-        """Fail any requests still queued once the dispatcher is gone
-        (e.g. a submit that raced shutdown) instead of leaving their
-        futures to hang until the client's result() timeout."""
-        while True:
-            try:
-                r = self.q.get_nowait()
-            except queue.Empty:
-                return
-            if r.future.set_running_or_notify_cancel():
-                r.future.set_exception(
-                    RuntimeError(f"model {self.model_name!r}: engine shut down")
-                )
-
-    def _bucket(self, n: int) -> int:
-        for b in self.buckets:
-            if b >= n:
-                return b
-        return self.buckets[-1]
-
-    def _execute(self, batch: list[_Request]) -> None:
-        # claim the futures; drop any the client cancelled while queued
-        batch = [r for r in batch if r.future.set_running_or_notify_cancel()]
-        if not batch:
-            return
-        n = len(batch)
-        b = self._bucket(n)
-        try:
-            x = np.zeros((b, *self.in_shape), np.int32)
-            for i, r in enumerate(batch):
-                x[i] = r.x
-            y = np.asarray(self._fn(x))
-        except Exception as e:  # resolve futures instead of killing the thread
-            for r in batch:
-                r.future.set_exception(e)
-            return
-        now = time.perf_counter()
-        for i, r in enumerate(batch):
-            r.future.set_result(y[i])
-            self.metrics.record(now - r.t_submit, now=now)
-        self.n_batches += 1
-        # counted only on success, keeping sum(bucket_hits) == n_batches
-        self.bucket_hits[b] += 1
-        if not self.jit_compiles[b]:
-            self.jit_compiles[b] = 1  # first dispatch of this shape compiles
-        self._occupancy_sum += n / b
+    def submit_many(self, xs: list, t_submit: float, block: bool) -> list[Future]:
+        if self.n_shards == 1 or len(xs) <= 1:
+            sh = self.shards[next(self._rr) % self.n_shards]
+            return sh.put_many(xs, t_submit, block)
+        # contiguous chunks, one per shard round-robin: one lock
+        # acquisition per shard instead of one per request
+        chunk = -(-len(xs) // self.n_shards)
+        futs: list[Future] = []
+        for i in range(0, len(xs), chunk):
+            sh = self.shards[next(self._rr) % self.n_shards]
+            futs.extend(sh.put_many(xs[i : i + chunk], t_submit, block))
+        return futs
 
     # -- control -------------------------------------------------------
     def warmup(self) -> float:
-        """Compile every bucket shape up front; returns wall seconds."""
+        """Compile every bucket shape up front; returns wall seconds.
+        Flags are set per bucket only after its trace+run returned, so a
+        mid-loop failure leaves only truthful flags behind."""
         t0 = time.perf_counter()
         for b in self.buckets:
-            if not self.jit_compiles[b]:
-                self.jit_compiles[b] = 1
             np.asarray(self._fn(np.zeros((b, *self.in_shape), np.int32)))
+            self.jit_compiles[b] = 1
         return time.perf_counter() - t0
 
     def stop(self, timeout: float = 5.0) -> None:
-        self._stop.set()
-        self._drained.wait(timeout)
-        self._fail_pending()  # catch puts that raced the dispatcher exit
+        # closed first: from here on every enqueue attempt fails fast
+        # (checked under the shard lock, closing the put-after-sweep
+        # race); already-queued requests are still drained and served.
+        self._closed.set()
+        for sh in self.shards:
+            sh.initiate_stop()
+        deadline = time.perf_counter() + timeout
+        for sh in self.shards:
+            sh._drained.wait(max(0.0, deadline - time.perf_counter()))
+        for sh in self.shards:
+            sh._fail_pending()  # drain timed out: fail leftovers loudly
 
     def stats(self) -> dict:
-        s = self.metrics.snapshot()
+        shard_snaps = [sh.snapshot() for sh in self.shards]
+        s = LatencyRecorder.merged_snapshot([sh.metrics for sh in self.shards])
+        bucket_hits = {int(b): 0 for b in self.buckets}
+        n_batches = n_rejected = qdepth = 0
+        occupancy = 0.0
+        for sh, snap in zip(self.shards, shard_snaps):
+            n_batches += snap["n_batches"]
+            n_rejected += snap["n_rejected"]
+            qdepth += snap["queue_depth"]
+            occupancy += sh._occupancy_sum
+            for b, c in snap["bucket_hits"].items():
+                bucket_hits[b] += c
         s.update(
             model=self.model_name,
-            n_batches=self.n_batches,
-            n_rejected=self.n_rejected,
-            queue_depth=self.q.qsize(),
-            mean_batch_occupancy=(
-                self._occupancy_sum / self.n_batches if self.n_batches else 0.0
-            ),
+            n_shards=self.n_shards,
+            n_batches=n_batches,
+            n_rejected=n_rejected,
+            queue_depth=qdepth,
+            mean_batch_occupancy=(occupancy / n_batches if n_batches else 0.0),
             buckets=list(self.buckets),
-            # bucket hit histogram + which bucket shapes have been jit
-            # compiled (0/1 per bucket; jax caches by shape): batches
-            # landing in oversized buckets, or — when serving without an
-            # up-front warmup — shapes compiling mid-traffic, show up
-            # here instead of only as a latency blip
-            bucket_hits={int(b): int(c) for b, c in self.bucket_hits.items()},
+            # aggregated bucket hit histogram + which bucket shapes have
+            # been jit compiled; per-shard histograms (each satisfying
+            # sum(bucket_hits) == n_batches) live under "shards"
+            bucket_hits=bucket_hits,
             jit_compiles={int(b): int(c) for b, c in self.jit_compiles.items()},
             n_jit_compiles=int(sum(self.jit_compiles.values())),
+            per_stage=StageAccumulator.merged_snapshot(
+                [sh.stage for sh in self.shards]
+            ),
+            shards=shard_snaps,
         )
         return s
 
 
 class ServeEngine:
-    """Multi-model registry + microbatched dispatch over compiled designs.
+    """Multi-model registry + sharded microbatched dispatch over
+    compiled designs.
 
     The canonical way to set knobs is ``config=``, a
     :class:`repro.flow.ServeConfig` (max_batch, max_wait_us,
-    queue_depth, backpressure, buckets); this is what ``Flow.serve``
-    constructs.  The individual kwargs are a deprecated shim kept for
-    one release (``overflow`` maps to ``backpressure``): they construct
-    the equivalent config and delegate.
+    queue_depth, backpressure, buckets, shards); this is what
+    ``Flow.serve`` constructs.  The individual kwargs are a deprecated
+    shim kept for one release (``overflow`` maps to ``backpressure``):
+    they construct the equivalent config and delegate.
 
     ``register`` rejects duplicate model names loudly — replacing a
     model in place would silently mix two designs' results under one
@@ -274,6 +504,7 @@ class ServeEngine:
         self.max_wait_us = config.max_wait_us
         self.buckets = config.buckets
         self.overflow = config.backpressure
+        self.shards = config.shards
         self._runners: dict[str, _ModelRunner] = {}
         self._lock = threading.Lock()
 
@@ -289,7 +520,7 @@ class ServeEngine:
             design = load_design(design)
         runner = _ModelRunner(
             name, design, self.max_batch, self.queue_depth,
-            self.max_wait_us, self.buckets,
+            self.max_wait_us, self.buckets, self.shards,
         )
         with self._lock:
             if name in self._runners:
@@ -311,9 +542,9 @@ class ServeEngine:
         return design
 
     def unregister(self, name: str, timeout: float = 5.0) -> None:
-        """Drop a model after draining its queue (waiting up to
-        ``timeout`` seconds for the dispatcher to finish; requests still
-        queued after that are failed loudly, never left hanging)."""
+        """Drop a model after draining its queues (waiting up to
+        ``timeout`` seconds for the dispatchers to finish; requests
+        still queued after that are failed loudly, never left hanging)."""
         with self._lock:
             runner = self._runners.pop(name)
         runner.stop(timeout)
@@ -344,58 +575,39 @@ class ServeEngine:
         return x
 
     def submit(self, name: str, x: np.ndarray) -> Future:
-        """Enqueue one sample (integer grid, shape ``in_shape``)."""
+        """Enqueue one sample (integer grid, shape ``in_shape``).
+
+        May raise :class:`QueueFullError` (reject policy, queue at
+        capacity) or :class:`EngineClosedError` (the submit raced
+        ``unregister``/``shutdown``; under a :class:`repro.flow.Deployment`
+        rollout the deployment layer retries onto the new version)."""
         runner = self._runner(name)
         x = self._validate(name, runner, x)
-        r = _Request(x, time.perf_counter(), Future())
-        if self.overflow == "reject":
-            try:
-                runner.q.put_nowait(r)
-            except queue.Full:
-                runner.n_rejected += 1
-                raise QueueFullError(
-                    f"queue for model {name!r} is full "
-                    f"({runner.q.maxsize} requests)"
-                ) from None
-        else:
-            runner.q.put(r)
-        return r.future
+        return runner.submit_one(
+            x, time.perf_counter(), block=self.overflow != "reject"
+        )
 
     def submit_batch(self, name: str, xs) -> list[Future]:
         """Enqueue many samples at once; returns one Future per sample.
 
         Amortizes per-request overhead (registry lookup, validation,
-        clock read) across the batch — the high-throughput entrypoint
-        for clients that already hold several requests.  ``xs`` is an
-        iterable of samples or an ``[n, *in_shape]`` array.
+        clock read, shard lock) across the batch — the high-throughput
+        entrypoint for clients that already hold several requests.
+        ``xs`` is an iterable of samples or an ``[n, *in_shape]`` array;
+        chunks are spread across shards.
 
         Backpressure mirrors ``submit`` per sample, except that with the
         "reject" policy an overflowing sample's Future is *failed* with
         :class:`QueueFullError` (and counted) instead of raising, so one
-        full queue cannot lose the whole batch: every returned Future
-        resolves either to a result or to the rejection.
+        full queue cannot lose the whole batch; samples cut off by a
+        racing shutdown are failed with :class:`EngineClosedError`.
+        Every returned Future resolves.
         """
         runner = self._runner(name)
         xs = [self._validate(name, runner, x) for x in xs]
-        now = time.perf_counter()
-        reqs = [_Request(x, now, Future()) for x in xs]
-        reject = self.overflow == "reject"
-        for r in reqs:
-            if reject:
-                try:
-                    runner.q.put_nowait(r)
-                except queue.Full:
-                    runner.n_rejected += 1
-                    if r.future.set_running_or_notify_cancel():
-                        r.future.set_exception(
-                            QueueFullError(
-                                f"queue for model {name!r} is full "
-                                f"({runner.q.maxsize} requests)"
-                            )
-                        )
-            else:
-                runner.q.put(r)
-        return [r.future for r in reqs]
+        return runner.submit_many(
+            xs, time.perf_counter(), block=self.overflow != "reject"
+        )
 
     def infer(self, name: str, x: np.ndarray, timeout: Optional[float] = 30.0):
         """Synchronous single-sample convenience wrapper."""

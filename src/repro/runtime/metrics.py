@@ -1,17 +1,33 @@
-"""Latency / throughput accounting for the serving engine.
+"""Latency / throughput / per-stage accounting for the serving engine.
 
-The recorder keeps raw per-request latencies (seconds, submit -> result)
-up to a cap and first/last completion timestamps; ``snapshot`` reduces
-them to the usual serving report: p50/p95/p99/mean/max latency in
-milliseconds plus the completed-request rate over the observation
-window.  Appends rely on the GIL for atomicity (single list append per
-request), so the hot path takes no locks.
+``LatencyRecorder`` keeps raw per-request latencies (seconds, submit ->
+result) up to a cap and first/last completion timestamps; ``snapshot``
+reduces them to the usual serving report: p50/p95/p99/mean/max latency
+in milliseconds plus the completed-request rate over the observation
+window.  The sharded engine keeps one recorder per dispatcher shard
+(each appended to by exactly one thread, so the hot path takes no
+locks) and merges them with :meth:`LatencyRecorder.merged_snapshot`.
+
+``StageAccumulator`` is the per-stage side of the story — in the spirit
+of rule4ml / hft-latency-lab stage-timestamped accounting ("measure
+where the time actually goes"): each dispatched batch contributes wall
+seconds to the five serving stages
+
+    queue_wait   submit -> dequeue, summed per request
+    batch_form   batching window after the first request of the batch
+    pad          slab gather + zero-pad into the bucket-shaped scratch
+    dispatch     jitted forward call (incl. blocking on the result)
+    copy_out     future resolution + latency recording
+
+so ``stats()`` can report where a request's latency budget actually
+goes instead of one opaque end-to-end number.  Accumulators are
+single-writer (one per shard) and merged at snapshot time.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Optional, Sequence
+from typing import Iterable, Optional, Sequence
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -21,6 +37,26 @@ def percentile(values: Sequence[float], q: float) -> float:
     s = sorted(values)
     k = max(0, min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1)))))
     return s[k]
+
+
+def _reduce(lat: list, n_total: int, t_first: Optional[float],
+            t_last: Optional[float]) -> dict:
+    span = (
+        (t_last - t_first)
+        if (t_first is not None and t_last is not None)
+        else 0.0
+    )
+    return {
+        "n_requests": n_total,
+        "n_latency_samples": len(lat),
+        "window_s": span,
+        "throughput_rps": (n_total / span) if span > 0 else 0.0,
+        "p50_ms": percentile(lat, 50) * 1e3 if lat else float("nan"),
+        "p95_ms": percentile(lat, 95) * 1e3 if lat else float("nan"),
+        "p99_ms": percentile(lat, 99) * 1e3 if lat else float("nan"),
+        "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else float("nan"),
+        "max_ms": max(lat) * 1e3 if lat else float("nan"),
+    }
 
 
 class LatencyRecorder:
@@ -45,24 +81,98 @@ class LatencyRecorder:
         else:
             self.n_dropped += 1
 
+    def record_many(self, latencies_s: Sequence[float],
+                    now: Optional[float] = None) -> None:
+        """Record one batch of latencies with a single timestamp — the
+        dispatcher's per-batch path (one ``extend`` instead of a Python
+        call per request)."""
+        if not latencies_s:
+            return
+        now = time.perf_counter() if now is None else now
+        if self.t_first is None:
+            self.t_first = now
+        self.t_last = now
+        self.n_total += len(latencies_s)
+        room = self.max_samples - len(self._lat)
+        if room >= len(latencies_s):
+            self._lat.extend(latencies_s)
+        else:
+            if room > 0:
+                self._lat.extend(latencies_s[:room])
+            self.n_dropped += len(latencies_s) - max(room, 0)
+
     def reset(self) -> None:
         self.__init__(self.max_samples)
 
     def snapshot(self) -> dict:
         lat = list(self._lat)  # copy: recording may continue concurrently
-        span = (
-            (self.t_last - self.t_first)
-            if (self.t_first is not None and self.t_last is not None)
-            else 0.0
-        )
+        return _reduce(lat, self.n_total, self.t_first, self.t_last)
+
+    @staticmethod
+    def merged_snapshot(recorders: Iterable["LatencyRecorder"]) -> dict:
+        """One snapshot over several recorders (per-shard recorders of
+        one model): raw samples are pooled so the percentiles are exact
+        over the union, not an average of per-shard percentiles."""
+        lat: list[float] = []
+        n_total = 0
+        t_first: Optional[float] = None
+        t_last: Optional[float] = None
+        for r in recorders:
+            lat.extend(r._lat)
+            n_total += r.n_total
+            if r.t_first is not None:
+                t_first = r.t_first if t_first is None else min(t_first, r.t_first)
+            if r.t_last is not None:
+                t_last = r.t_last if t_last is None else max(t_last, r.t_last)
+        return _reduce(lat, n_total, t_first, t_last)
+
+
+class StageAccumulator:
+    """Per-stage wall-time totals for the dispatch path (single writer).
+
+    ``add(stage, seconds, n)`` charges ``seconds`` of wall time and ``n``
+    units to a stage (units are requests for ``queue_wait``, batches for
+    the others — the snapshot reports both the total and the mean per
+    unit so the two kinds stay interpretable).
+    """
+
+    STAGES = ("queue_wait", "batch_form", "pad", "dispatch", "copy_out")
+
+    def __init__(self):
+        self.total_s = {s: 0.0 for s in self.STAGES}
+        self.count = {s: 0 for s in self.STAGES}
+
+    def add(self, stage: str, seconds: float, n: int = 1) -> None:
+        self.total_s[stage] += seconds
+        self.count[stage] += n
+
+    def snapshot(self) -> dict:
         return {
-            "n_requests": self.n_total,
-            "n_latency_samples": len(lat),
-            "window_s": span,
-            "throughput_rps": (self.n_total / span) if span > 0 else 0.0,
-            "p50_ms": percentile(lat, 50) * 1e3 if lat else float("nan"),
-            "p95_ms": percentile(lat, 95) * 1e3 if lat else float("nan"),
-            "p99_ms": percentile(lat, 99) * 1e3 if lat else float("nan"),
-            "mean_ms": (sum(lat) / len(lat) * 1e3) if lat else float("nan"),
-            "max_ms": max(lat) * 1e3 if lat else float("nan"),
+            s: {
+                "total_ms": self.total_s[s] * 1e3,
+                "count": self.count[s],
+                "mean_us": (
+                    self.total_s[s] / self.count[s] * 1e6
+                    if self.count[s]
+                    else 0.0
+                ),
+            }
+            for s in self.STAGES
+        }
+
+    @staticmethod
+    def merged_snapshot(accs: Iterable["StageAccumulator"]) -> dict:
+        total = {s: 0.0 for s in StageAccumulator.STAGES}
+        count = {s: 0 for s in StageAccumulator.STAGES}
+        for a in accs:
+            for s in StageAccumulator.STAGES:
+                total[s] += a.total_s[s]
+                count[s] += a.count[s]
+        return {
+            s: {
+                "total_ms": total[s] * 1e3,
+                "count": count[s],
+                "mean_us": (total[s] / count[s] * 1e6) if count[s] else 0.0,
+            }
+            for s in StageAccumulator.STAGES
         }

@@ -1,15 +1,24 @@
 """Microbatched serving engine: results must be bit-identical to direct
-``forward_int``, the registry must isolate models, and backpressure /
+``forward_int``, the registry must isolate models, backpressure /
 shape validation must fail requests loudly instead of corrupting
-batches."""
+batches, and — the serving-shutdown stress net — every Future handed
+out by a submit racing ``unregister``/``shutdown``/rollout must resolve
+(result or exception) within a bounded timeout, on both the
+single-dispatcher and the sharded path."""
+
+import threading
+import time
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import numpy as np
 import pytest
 
 import jax
 
+from repro.flow import Deployment, ServeConfig
 from repro.nn import QDense, QuantConfig, ReLU, compile_model, init_params
-from repro.runtime import QueueFullError, ServeEngine, save_design
+from repro.runtime import EngineClosedError, QueueFullError, ServeEngine, save_design
+from repro.runtime.engine import _ModelRunner
 
 
 @pytest.fixture(scope="module")
@@ -179,3 +188,297 @@ def test_stats_bucket_histograms(designs):
         assert set(s3["bucket_hits"]) == {1, 2, 4, 8}
         # compiles never exceed one per bucket shape (jit caches by shape)
         assert all(c <= 1 for c in s3["jit_compiles"].values())
+
+
+# -- sharded dispatch path ------------------------------------------------
+
+
+def test_sharded_results_bit_identical(designs):
+    """shards=4: same bits as direct forward_int, through both submit
+    and submit_batch, with traffic spread over every shard."""
+    design = designs["a"]
+    xs = _samples(200)
+    want = np.asarray(design.forward_int(xs))
+    cfg = ServeConfig(max_batch=16, max_wait_us=100.0, shards=4)
+    with ServeEngine(config=cfg) as eng:
+        eng.register("a", design, warmup=True)
+        futs = [eng.submit("a", x) for x in xs[:100]]
+        futs += eng.submit_batch("a", xs[100:])
+        got = np.stack([f.result(30) for f in futs])
+        s = eng.stats("a")
+    np.testing.assert_array_equal(got, want)
+    assert s["n_shards"] == 4 and len(s["shards"]) == 4
+    assert all(ss["n_requests"] > 0 for ss in s["shards"])  # round-robin
+
+
+def test_per_shard_stats_consistency(designs):
+    """Per-shard counters reconcile: sum(bucket_hits) == n_batches on
+    every shard AND on the aggregate, request counts sum across shards,
+    and the per-stage accounting covers every executed batch."""
+    cfg = ServeConfig(max_batch=8, max_wait_us=100.0, shards=3)
+    with ServeEngine(config=cfg) as eng:
+        eng.register("a", designs["a"], warmup=True)
+        for f in [eng.submit("a", x) for x in _samples(60, seed=7)]:
+            f.result(30)
+        for f in eng.submit_batch("a", _samples(40, seed=8)):
+            f.result(30)
+        s = eng.stats("a")
+    for ss in s["shards"]:
+        assert sum(ss["bucket_hits"].values()) == ss["n_batches"]
+    assert sum(s["bucket_hits"].values()) == s["n_batches"]
+    assert s["n_batches"] == sum(ss["n_batches"] for ss in s["shards"])
+    assert s["n_requests"] == 100 == sum(ss["n_requests"] for ss in s["shards"])
+    ps = s["per_stage"]
+    assert ps["dispatch"]["count"] == s["n_batches"]
+    assert ps["pad"]["count"] == s["n_batches"]
+    assert ps["queue_wait"]["count"] == 100  # one sample per served request
+    for rec in ps.values():
+        assert np.isfinite(rec["total_ms"]) and rec["total_ms"] >= 0.0
+        assert np.isfinite(rec["mean_us"]) and rec["mean_us"] >= 0.0
+
+
+def test_warmup_failure_leaves_truthful_flags():
+    """A warmup that raises mid-loop must flag only the buckets whose
+    trace actually completed (pre-fix: flags were set before the call,
+    reporting never-traced buckets as compiled)."""
+
+    class _Boom:
+        in_shape = (8,)
+
+        @staticmethod
+        def forward_int(x):
+            if x.shape[0] >= 4:
+                raise ValueError("boom bucket")
+            return x
+
+    runner = _ModelRunner("boom", _Boom(), 8, 16, 100.0, None, shards=2)
+    with pytest.raises(ValueError, match="boom bucket"):
+        runner.warmup()
+    assert runner.jit_compiles == {1: 1, 2: 1, 4: 0, 8: 0}
+
+
+def test_rejected_counter_exact_under_concurrency(designs):
+    """n_rejected was a racy read-modify-write from submitter threads;
+    now it is lock-guarded per shard, so the engine's count must equal
+    the rejections the clients actually observed — exactly."""
+    cfg = ServeConfig(
+        max_batch=4, queue_depth=4, max_wait_us=200_000.0,
+        backpressure="reject", shards=2,
+    )
+    eng = ServeEngine(config=cfg)
+    try:
+        eng.register("a", designs["a"], warmup=True)
+        xs = _samples(64, seed=9)
+        n_threads = 4
+        rejects = [0] * n_threads
+        accepted = [[] for _ in range(n_threads)]
+
+        def flood(i):
+            for x in xs:
+                try:
+                    accepted[i].append(eng.submit("a", x))
+                except QueueFullError:
+                    rejects[i] += 1
+
+        threads = [
+            threading.Thread(target=flood, args=(i,)) for i in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        total_rejected = sum(rejects)
+        assert total_rejected > 0
+        assert eng.stats("a")["n_rejected"] == total_rejected
+        for futs in accepted:
+            for f in futs:
+                assert f.result(30).shape == (6,)
+    finally:
+        eng.shutdown()
+
+
+# -- serving-shutdown stress: no future may ever hang ---------------------
+
+
+def _resolve_all(futures, timeout=5.0):
+    """Every future must resolve (result or exception) within timeout;
+    returns (n_ok, n_failed) and fails the test on a hang."""
+    n_ok = n_failed = 0
+    for f in futures:
+        try:
+            exc = f.exception(timeout=timeout)
+        except FutureTimeoutError:
+            pytest.fail("future left hanging past the resolution timeout")
+        if exc is None:
+            n_ok += 1
+        else:
+            assert isinstance(exc, RuntimeError)  # closed / queue-full
+            n_failed += 1
+    return n_ok, n_failed
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_shutdown_stress_no_hung_futures(designs, shards):
+    """Hammer submit + submit_batch from several threads while shutdown
+    proceeds: every Future ever handed out resolves within a bounded
+    timeout (the regression net for the put-after-final-sweep race)."""
+    cfg = ServeConfig(max_batch=8, max_wait_us=200.0, shards=shards)
+    eng = ServeEngine(config=cfg)
+    eng.register("a", designs["a"], warmup=True)
+    xs = _samples(8, seed=10)
+    futures: list = []
+    flock = threading.Lock()
+    stop = threading.Event()
+
+    def hammer(i):
+        n = 0
+        while not stop.is_set():
+            try:
+                if n % 3 == 0:
+                    fs = eng.submit_batch("a", xs)
+                else:
+                    fs = [eng.submit("a", xs[n % len(xs)])]
+            except (EngineClosedError, KeyError):
+                break
+            with flock:
+                futures.extend(fs)
+            n += 1
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.15)
+    eng.shutdown(timeout=5.0)
+    stop.set()
+    for t in threads:
+        t.join(5.0)
+        assert not t.is_alive()
+    n_ok, _ = _resolve_all(futures)
+    assert n_ok > 0  # the drain served real traffic before closing
+
+
+def test_unregister_race_futures_resolve(designs):
+    """submit_batch racing unregister across repeated register/drop
+    cycles: the drain serves what it can, fails the rest loudly with
+    the shut-down error, and nothing hangs."""
+    eng = ServeEngine(config=ServeConfig(max_batch=8, max_wait_us=100.0, shards=2))
+    try:
+        for trial in range(3):
+            eng.register("a", designs["a"])
+            xs = _samples(16, seed=11 + trial)
+            futures: list = []
+            flock = threading.Lock()
+
+            def hammer():
+                while True:
+                    try:
+                        fs = eng.submit_batch("a", xs)
+                    except (KeyError, EngineClosedError):
+                        return
+                    with flock:
+                        futures.extend(fs)
+
+            threads = [threading.Thread(target=hammer) for _ in range(3)]
+            for t in threads:
+                t.start()
+            time.sleep(0.05)
+            eng.unregister("a", timeout=5.0)
+            for t in threads:
+                t.join(5.0)
+                assert not t.is_alive()
+            _resolve_all(futures)
+    finally:
+        eng.shutdown()
+
+
+def test_rollout_drain_race_futures_resolve(designs):
+    """Deployment rollout under concurrent traffic: the alias retry
+    hides the flip from clients (no KeyError escapes), v1's in-flight
+    futures complete during the drain, and every future resolves."""
+    with Deployment(ServeConfig(max_batch=8, max_wait_us=100.0, shards=2)) as dep:
+        dep.register("m", designs["a"])
+        xs = _samples(8, seed=12)
+        futures: list = []
+        flock = threading.Lock()
+        stop = threading.Event()
+        escaped: list = []
+
+        def hammer(i):
+            n = 0
+            while not stop.is_set():
+                try:
+                    if i % 2:
+                        fs = dep.submit_batch("m", xs)
+                    else:
+                        fs = [dep.submit("m", xs[n % len(xs)])]
+                except Exception as e:  # noqa: BLE001 - recorded and asserted
+                    escaped.append(e)
+                    return
+                with flock:
+                    futures.extend(fs)
+                n += 1
+
+        threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for _ in range(3):
+            time.sleep(0.05)
+            dep.register("m", designs["a"])  # rollout: flip alias, drain old
+        stop.set()
+        for t in threads:
+            t.join(10.0)
+            assert not t.is_alive()
+        assert not escaped
+        n_ok, _ = _resolve_all(futures)
+        assert n_ok > 0
+
+
+def test_blocked_submitters_wake_on_shutdown(designs):
+    """Submitters blocked on a saturated queue (block policy) are woken
+    by shutdown and fail fast with the shut-down error instead of
+    deadlocking inside submit."""
+    cfg = ServeConfig(max_batch=4, queue_depth=2, max_wait_us=500_000.0, shards=1)
+    eng = ServeEngine(config=cfg)
+    eng.register("a", designs["a"], warmup=True)
+    xs = _samples(4, seed=13)
+    futures: list = []
+    flock = threading.Lock()
+    outcome: list = []
+
+    def pusher():
+        try:
+            while True:
+                f = eng.submit("a", xs[0])
+                with flock:
+                    futures.append(f)
+        except EngineClosedError:
+            outcome.append("closed")
+
+    threads = [threading.Thread(target=pusher) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)  # queue and slab saturate; pushers block in submit
+    eng.shutdown(timeout=5.0)
+    for t in threads:
+        t.join(5.0)
+        assert not t.is_alive()
+    assert outcome == ["closed"] * 3
+    _resolve_all(futures)
+
+
+def test_submit_after_stop_fails_fast(designs):
+    """The shutdown race, deterministically: a submitter that grabbed
+    the runner reference just before shutdown popped it must fail fast
+    on the put path (or get failed futures) — never enqueue into a
+    dispatcherless queue."""
+    eng = ServeEngine(config=ServeConfig(max_batch=4, shards=2))
+    eng.register("a", designs["a"])
+    runner = eng._runner("a")
+    x = _samples(1, seed=14)[0]
+    eng.shutdown()
+    with pytest.raises(EngineClosedError, match="shut down"):
+        runner.submit_one(x, time.perf_counter(), block=True)
+    futs = runner.submit_many([x] * 3, time.perf_counter(), block=True)
+    for f in futs:
+        with pytest.raises(EngineClosedError, match="shut down"):
+            f.result(1)
