@@ -1,7 +1,7 @@
 """Perf-trajectory gate: compare a fresh bench JSON against the
 committed baseline at the repo root.
 
-Two kinds (``--kind``):
+Three kinds (``--kind``):
 
   * ``solver`` (default) — ``solver_smoke`` vs ``BENCH_solver.json``;
   * ``serve``  — ``serve_load`` vs ``BENCH_serve.json``: correctness
@@ -9,7 +9,12 @@ Two kinds (``--kind``):
     per-shard counter consistency, p99 SLO) are deterministic failures;
     throughput must not drop more than ``tolerance`` below baseline and
     p99 must not exceed baseline by more than ``tolerance`` (with a
-    ``--p99-floor-ms`` noise floor for shared runners).
+    ``--p99-floor-ms`` noise floor for shared runners);
+  * ``rtl``    — ``rtl_cosim`` vs ``BENCH_rtl.json``: everything is
+    deterministic (the solver and the simulator are pure functions of
+    the seeds): any bit mismatch or latency violation fails, the fresh
+    grid must cover every baseline case, and per-case adder counts /
+    cost bits / stage structure must match the baseline exactly.
 
 Two classes of check:
 
@@ -185,16 +190,68 @@ def compare_serve(fresh: dict, baseline: dict, tolerance: float = 0.5,
     return violations
 
 
+def compare_rtl(fresh: dict, baseline: dict) -> list[str]:
+    """RTL co-sim gate: fully deterministic, no timing tolerances.
+
+    Fails on any bit mismatch or cycle-accounting violation in the
+    fresh run, on baseline cases missing from the fresh grid (coverage
+    must never silently shrink), and on drift of the per-case program
+    shape (adders, cost bits, stages, latency) — the emitted RTL is a
+    pure function of the grid seeds, so any change here is an
+    intentional solver/emitter change that must land with a new
+    baseline.  Returns a list of violation messages (empty = pass).
+    """
+    violations: list[str] = []
+    if not fresh.get("all_bit_exact", False):
+        violations.append("rtl: fresh run is not bit-exact on every leg")
+    fi = {c["name"]: c for c in fresh.get("cases", [])}
+    bi = {c["name"]: c for c in baseline.get("cases", [])}
+    missing = sorted(set(bi) - set(fi))
+    if missing:
+        violations.append(f"rtl: fresh grid lacks baseline cases: {missing}")
+    for name in sorted(fi):
+        c = fi[name]
+        ok = c.get("bit_exact", False) and c.get("latency_ok", False)
+        jitleg = c.get("jit", {})
+        if jitleg.get("status") == "checked" and not jitleg.get("bit_exact", False):
+            ok = False
+        ext = c.get("external", {})
+        if ext.get("status") == "checked" and not ext.get("bit_exact", False):
+            ok = False
+        drift = []
+        if name in bi:
+            b = bi[name]
+            for metric in ("adders", "cost_bits", "n_stages",
+                           "expected_latency_cycles"):
+                if c.get(metric) != b.get(metric):
+                    drift.append(
+                        f"{metric} {c.get(metric)} != baseline {b.get(metric)}"
+                    )
+        status = "ok" if ok and not drift else "FAIL"
+        print(f"rtl/{name}: {status}" + (f" ({'; '.join(drift)})" if drift else ""))
+        if not ok:
+            violations.append(
+                f"rtl/{name}: mismatch "
+                f"(bit_exact={c.get('bit_exact')}, latency_ok={c.get('latency_ok')}, "
+                f"jit={jitleg.get('status')}/{jitleg.get('bit_exact')})"
+            )
+        for d in drift:
+            violations.append(f"rtl/{name}: {d} (deterministic drift)")
+    return violations
+
+
 _DEFAULT_BASELINES = {
     "solver": "BENCH_solver.json",
     "serve": "BENCH_serve.json",
+    "rtl": "BENCH_rtl.json",
 }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", required=True, help="fresh bench JSON")
-    ap.add_argument("--kind", choices=("solver", "serve"), default="solver",
+    ap.add_argument("--kind", choices=("solver", "serve", "rtl"),
+                    default="solver",
                     help="which bench family the JSONs belong to")
     ap.add_argument(
         "--baseline", default=None,
@@ -225,7 +282,9 @@ def main(argv=None) -> int:
         return 0
     with open(baseline_path) as fh:
         baseline = json.load(fh)
-    if args.kind == "serve":
+    if args.kind == "rtl":
+        violations = compare_rtl(fresh, baseline)
+    elif args.kind == "serve":
         violations = compare_serve(
             fresh, baseline, args.tolerance, args.p99_floor_ms
         )

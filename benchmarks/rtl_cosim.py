@@ -1,0 +1,81 @@
+"""RTL co-simulation gate: simulated RTL ≡ DAIS interpreter ≡ jitted
+forward, bit-exact per output and cycle-accurate per pipeline stage.
+
+Runs the default co-sim grid ({strategy × engine × pipelined/comb ×
+matrix shape incl. zero/negative-output columns, unsigned inputs, and
+fractional-grid negative output shifts}) and writes a JSON report —
+the CI artifact and, via ``benchmarks.perf_gate --kind rtl``, the
+deterministic trajectory gate against the committed ``BENCH_rtl.json``.
+
+Legs:
+
+* RTL-vs-interpreter — numpy only, always on (the hard gate);
+* jitted forward — on when JAX is importable (``--jit require`` to
+  force, as the tier-1 CI environment does);
+* external reference simulator (Verilator / Icarus) — ``--external
+  require`` in the weekly cross-check job; skips loudly otherwise.
+
+Usage::
+
+    python -m benchmarks.run rtl --json rtl-cosim.json
+    python -m benchmarks.rtl_cosim --external require --json rtl-verilator.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(json_path=None, jit: str = "auto", external: str = "skip") -> dict:
+    from repro.core.cosim import cosim_grid, default_grid, external_tool
+
+    cases = default_grid()
+    result = cosim_grid(cases, jit=jit, external=external)
+    for c in result["cases"]:
+        ok = c["bit_exact"] and c["latency_ok"]
+        jit_s = c["jit"].get("status", "skipped")
+        if c["jit"].get("status") == "checked" and not c["jit"]["bit_exact"]:
+            ok = False
+        ext = c.get("external", {})
+        if ext.get("status") == "checked" and not ext["bit_exact"]:
+            ok = False
+        print(
+            f"rtl_cosim,{c['name']},adders={c['adders']},"
+            f"latency={c['accounting']['latency_cycles']},"
+            f"stages={c['n_stages']},jit={jit_s},"
+            f"{'OK' if ok else 'MISMATCH'}",
+            flush=True,
+        )
+    if external != "skip":
+        tool = external_tool()
+        print(f"# external simulator: {tool or 'NONE (skipped loudly)'}")
+    print(
+        f"# {result['n_cases']} cases, {result['n_bit_exact']} bit-exact, "
+        f"jit checked {result['jit']['checked']}, "
+        f"external checked {result['external']['checked']}"
+    )
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
+    return result
+
+
+def passed(result: dict) -> bool:
+    """Gate: every leg that ran must be bit-exact and cycle-accurate."""
+    if not result["all_bit_exact"]:
+        return False
+    return all(c["latency_ok"] for c in result["cases"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", dest="json_path", default=None)
+    ap.add_argument("--jit", choices=("auto", "require", "skip"), default="auto")
+    ap.add_argument("--external", choices=("auto", "require", "skip"),
+                    default="skip")
+    args = ap.parse_args()
+    result = main(args.json_path, jit=args.jit, external=args.external)
+    sys.exit(0 if passed(result) else 1)

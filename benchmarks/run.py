@@ -6,6 +6,7 @@
     fig7_runtime_scaling    Fig. 7 (solver runtime scaling)
     solver_smoke            solver fast-path wall-clock budget check
     serve_load              artifact round-trip + microbatched serve load
+    rtl_cosim               RTL co-simulation gate (three-way bit-exact)
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
@@ -24,7 +25,14 @@ import importlib
 import sys
 from pathlib import Path
 
-BENCH_SOLVER_JSON = Path(__file__).resolve().parent.parent / "BENCH_solver.json"
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_SOLVER_JSON = _REPO_ROOT / "BENCH_solver.json"
+# benches whose --json run also refreshes a committed trajectory baseline
+# (only when the gate passed, so a regressing run never poisons the ref)
+_BASELINES = {
+    "smoke": BENCH_SOLVER_JSON,
+    "rtl": _REPO_ROOT / "BENCH_rtl.json",
+}
 
 
 def main() -> None:
@@ -46,6 +54,7 @@ def main() -> None:
         "fig7": "fig7_runtime_scaling",
         "smoke": "solver_smoke",
         "serve": "serve_load",
+        "rtl": "rtl_cosim",
         "lm": "lm_step_bench",
     }
     failed = False
@@ -54,24 +63,26 @@ def main() -> None:
             continue
         mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        if name in ("smoke", "serve"):
+        if name in ("smoke", "serve", "rtl"):
             # gated benches: JSON artifact + exit-1 on budget/exactness
             # failure.  --json targets the explicitly selected bench
             # (or smoke, the historical default, when running all).
             jp = json_path if (only == name or (name == "smoke" and only is None)) else None
             result = mod.main(json_path=jp)
             ok = mod.passed(result)
-            if name == "smoke" and jp is not None and ok:
+            if name in _BASELINES and jp is not None and ok:
                 # --json runs refresh the committed perf baseline — but
                 # only when the gate passed, so a regressing run can
                 # never poison the reference
                 import json as _json
 
-                with open(BENCH_SOLVER_JSON, "w") as fh:
+                with open(_BASELINES[name], "w") as fh:
                     _json.dump(result, fh, indent=2, sort_keys=True)
                 print(
-                    f"# refreshed {BENCH_SOLVER_JSON} with THIS machine's "
-                    "timings — commit it only from the canonical perf box",
+                    f"# refreshed {_BASELINES[name]} with this run — "
+                    "solver timings are machine-specific (commit those only "
+                    "from the canonical perf box); rtl numbers are "
+                    "deterministic",
                     file=sys.stderr,
                 )
             failed = failed or not ok

@@ -9,9 +9,13 @@ Public API:
     decompose         stage-1 graph decomposition (M = M1 @ M2)
     pipeline          greedy register insertion
     emit_verilog      standalone RTL generation
+    parse_verilog     netlist parser for the emitted subset
+    RTLSimulator      cycle-accurate pure-Python RTL simulation
+    cosim_case        three-way RTL/interpreter/jit co-simulation
 """
 
 from .cache import CacheStats, SolutionCache, pack_solution, solve_key, unpack_solution
+from .cosim import cosim_case, cosim_grid, cosim_program, default_grid
 from .csd import csd_nnz, csd_span, from_csd, to_csd, vector_csd_nnz
 from .cost import adder_cost, ceil_log2, min_tree_depth, min_tree_depth_hist, overlap_bits
 from .cse import CSE
@@ -19,6 +23,7 @@ from .dais import DAISProgram, Term, qints_from_array, qints_to_array
 from .fixed_point import QInterval
 from .graph_decompose import Decomposition, decompose
 from .pipelining import PipelineReport, pipeline
+from .rtlsim import RTLModule, RTLSimError, RTLSimulator, SimResult, parse_verilog
 from .solver import Solution, config_solve_key, naive_adder_tree, solve_cmvm
 from .verilog import emit_verilog
 
@@ -29,15 +34,23 @@ __all__ = [
     "Decomposition",
     "PipelineReport",
     "QInterval",
+    "RTLModule",
+    "RTLSimError",
+    "RTLSimulator",
+    "SimResult",
     "Solution",
     "SolutionCache",
     "Term",
     "adder_cost",
     "ceil_log2",
     "config_solve_key",
+    "cosim_case",
+    "cosim_grid",
+    "cosim_program",
     "csd_nnz",
     "csd_span",
     "decompose",
+    "default_grid",
     "emit_verilog",
     "from_csd",
     "min_tree_depth",
@@ -45,6 +58,7 @@ __all__ = [
     "naive_adder_tree",
     "overlap_bits",
     "pack_solution",
+    "parse_verilog",
     "pipeline",
     "qints_from_array",
     "qints_to_array",

@@ -60,7 +60,10 @@ def pipeline(prog: DAISProgram, max_delay_per_stage: int = 5) -> PipelineReport:
                 last_use[o] = max(last_use[o], stage[i])
     for t in prog.outputs:
         if t is not None:
-            last_use[t.row] = n_stages - 1
+            # max, not assignment: a row can be consumed by an op in a
+            # later stage than any output; its carry registers still cost
+            # FF bits (mirrors the emission rule in verilog.py)
+            last_use[t.row] = max(last_use[t.row], n_stages - 1)
     ff = 0
     for i, r in enumerate(prog.rows):
         crossings = max(last_use[i] - stage[i], 0)

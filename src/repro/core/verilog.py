@@ -15,8 +15,26 @@ from .dais import KIND_ADD, KIND_INPUT, KIND_NEG, DAISProgram
 from .pipelining import pipeline
 
 
+def _signed_width(q) -> int:
+    """Declared width of a value carried on a ``signed`` wire.
+
+    ``QInterval.width`` is the minimal two's-complement width for the
+    interval — but for a non-negative interval (e.g. unsigned inputs or
+    all-positive dot products) that count has no sign bit, and a
+    ``signed [w-1:0]`` wire of that width wraps the upper half of the
+    range (255 on an 8-bit signed wire reads back as -1, and every
+    downstream sign-extension propagates the corruption).  All wires in
+    the emitted module are declared signed so the Verilog expression
+    rules keep arithmetic signed throughout; non-negative values
+    therefore pay one explicit sign bit.  Caught by RTL co-simulation
+    (see rtlsim/cosim); exercised in tests/test_rtlsim.py.
+    """
+    w = q.width + (0 if q.lo < 0 else 1)
+    return max(w, 1)
+
+
 def _w(prog: DAISProgram, i: int) -> int:
-    return max(prog.rows[i].qint.width, 1)
+    return _signed_width(prog.rows[i].qint)
 
 
 def emit_verilog(
@@ -33,7 +51,7 @@ def emit_verilog(
     ports = ["input wire clk"] if pipelined else []
     for i in range(prog.n_inputs):
         ports.append(f"input wire signed [{_w(prog, i)-1}:0] x{i}")
-    out_widths = [max(q.width, 1) for q in prog.output_qints()]
+    out_widths = [_signed_width(q) for q in prog.output_qints()]
     for j, w in enumerate(out_widths):
         ports.append(f"output wire signed [{w-1}:0] y{j}")
     lines.append(f"module {module_name} (")
@@ -57,7 +75,12 @@ def emit_verilog(
                 last_use[o] = max(last_use[o], rep.stage_of_row[i])
     for t in prog.outputs:
         if t is not None:
-            last_use[t.row] = n_stage - 1
+            # max, not assignment: an output row may also feed an op in a
+            # LATER stage than any output (dead or auxiliary logic), and
+            # clobbering its last_use would drop the stage-carry register
+            # — the late op would then read a value one cycle too new
+            # (caught by rtlsim's register-balance check)
+            last_use[t.row] = max(last_use[t.row], n_stage - 1)
 
     regs: list[tuple[str, str]] = []  # (dst, src) clocked assignments
     for i, r in enumerate(prog.rows):

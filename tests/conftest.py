@@ -1,6 +1,6 @@
 """Shared test configuration.
 
-The five property-test modules below use ``hypothesis``.  The package is
+The six property-test modules below use ``hypothesis``.  The package is
 an optional dev dependency (see requirements-dev.txt); when it is not
 installed those modules are skipped at collection so the rest of the
 suite still collects and runs green.
@@ -11,6 +11,7 @@ _HYPOTHESIS_MODULES = [
     "test_fixed_point.py",
     "test_nn_property.py",
     "test_pipelining_verilog.py",
+    "test_rtlsim_property.py",
     "test_solver.py",
 ]
 

@@ -1,0 +1,387 @@
+"""RTL netlist simulator (core/rtlsim.py) and three-way co-simulation
+harness (core/cosim.py): parser/evaluator unit tests, Verilog-semantics
+regressions (width wrapping, arithmetic shift, signed-width emission),
+register fill latency, and grid-level bit-exactness."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DAISProgram,
+    QInterval,
+    RTLSimError,
+    RTLSimulator,
+    Term,
+    cosim_case,
+    cosim_program,
+    emit_verilog,
+    parse_verilog,
+    pipeline,
+    solve_cmvm,
+)
+from repro.core.cosim import default_grid, external_tool, run_external
+from repro.flow import SolverConfig
+
+
+def _toy_program() -> DAISProgram:
+    p = DAISProgram()
+    q8 = QInterval.from_fixed(True, 8, 8)
+    i0 = p.add_input(q8)
+    i1 = p.add_input(q8)
+    r2 = p.add_op(i0, i1, 0, 0, 1)
+    r3 = p.add_op(r2, i1, 0, 2, 1)
+    r4 = p.add_op(r3, i0, 0, 0, -1)
+    p.outputs = [Term(1, r4, 0), Term(-1, r2, 1)]
+    return p
+
+
+# ----------------------------------------------------------------------
+# parser
+# ----------------------------------------------------------------------
+def test_parse_toy_module():
+    v = emit_verilog(_toy_program(), "toy", max_delay_per_stage=2)
+    mod = parse_verilog(v)
+    assert mod.name == "toy"
+    assert mod.clock == "clk"
+    assert mod.inputs == ["x0", "x1"]
+    assert mod.outputs == ["y0", "y1"]
+    assert mod.signals["x0"].width == 8 and mod.signals["x0"].signed
+    assert mod.signals["y0"].width == 11
+    # v0, v2, v3 cross the one stage boundary
+    assert sorted(a.dst for a in mod.clocked) == ["v0_s1", "v2_s1", "v3_s1"]
+    assert mod.latency_cycles == 1
+
+
+def test_parse_combinational_module():
+    v = emit_verilog(_toy_program(), "toy", max_delay_per_stage=None)
+    mod = parse_verilog(v)
+    assert mod.clock is None
+    assert mod.clocked == []
+    assert mod.latency_cycles == 0
+
+
+@pytest.mark.parametrize(
+    "src,err",
+    [
+        ("module m (input wire signed [3:0] a);\n initial x = 1;\nendmodule", "unsupported"),
+        ("module m (input wire a, output wire y);\n assign y = b;\nendmodule", "undeclared"),
+        ("module m (input wire a, output wire y);\nendmodule", "undriven"),
+        (
+            "module m (input wire a, output wire y);\n"
+            "  wire u;\n  assign u = y;\n  assign y = u;\nendmodule",
+            "combinational loop",
+        ),
+        (
+            "module m (input wire a, output wire y);\n"
+            "  assign y = a;\n  assign y = a;\nendmodule",
+            "multiple drivers",
+        ),
+    ],
+)
+def test_parse_rejects(src, err):
+    with pytest.raises(RTLSimError, match=err):
+        parse_verilog(src)
+
+
+# ----------------------------------------------------------------------
+# Verilog expression semantics
+# ----------------------------------------------------------------------
+def test_width_wrapping_two_complement():
+    """A sum stored in a too-narrow signed wire wraps, exactly as RTL."""
+    src = """
+module wrap (
+  input wire signed [3:0] a,
+  input wire signed [3:0] b,
+  output wire signed [3:0] y
+);
+  wire signed [3:0] s;
+  assign s = a + b;
+  assign y = s;
+endmodule
+"""
+    sim = RTLSimulator(src)
+    x = np.array([[7, 7], [-8, -8], [7, 1], [-8, 7]], dtype=np.int64)
+    got = sim.run_combinational(x)[:, 0]
+    assert got.tolist() == [-2, 0, -8, -1]  # mod-16 two's complement
+
+
+def test_arithmetic_vs_logical_right_shift():
+    src = """
+module sh (
+  input wire signed [7:0] a,
+  output wire signed [7:0] ya,
+  output wire signed [7:0] yl
+);
+  assign ya = (a >>> 2);
+  assign yl = (a >> 2);
+endmodule
+"""
+    sim = RTLSimulator(src)
+    got = sim.run_combinational(np.array([[-5], [-128], [100]], dtype=np.int64))
+    # >>> sign-extends (floor); >> shifts the raw 8-bit pattern in zeros
+    assert got[:, 0].tolist() == [-2, -32, 25]
+    assert got[:, 1].tolist() == [(-5 & 0xFF) >> 2, (-128 & 0xFF) >> 2, 25]
+
+
+def test_left_shift_wraps_at_context_width():
+    """(a <<< k) inside a narrow assignment wraps mod 2^width."""
+    src = """
+module shw (
+  input wire signed [3:0] a,
+  output wire signed [4:0] y
+);
+  assign y = (a <<< 2);
+endmodule
+"""
+    sim = RTLSimulator(src)
+    got = sim.run_combinational(np.array([[7], [-8], [3]], dtype=np.int64))[:, 0]
+    # context width max(5, 4) = 5: 28 wraps to -4, -32 wraps to 0
+    assert got.tolist() == [-4, 0, 12]
+
+
+def test_unsigned_expression_zero_extends():
+    """One unsigned operand makes the whole expression unsigned (LRM)."""
+    src = """
+module uz (
+  input wire signed [3:0] a,
+  input wire [3:0] b,
+  output wire [7:0] y
+);
+  assign y = a + b;
+endmodule
+"""
+    sim = RTLSimulator(src)
+    # a = -1 is zero-extended to 15 in the unsigned 8-bit context
+    got = sim.run_combinational(np.array([[-1, 1]], dtype=np.int64))[0, 0]
+    assert got == 16
+
+
+def test_unbalanced_pipeline_rejected():
+    src = """
+module ub (
+  input wire clk,
+  input wire signed [3:0] a,
+  output wire signed [4:0] y
+);
+  reg signed [3:0] a_q;
+  always @(posedge clk) begin
+    a_q <= a;
+  end
+  assign y = a + a_q;
+endmodule
+"""
+    with pytest.raises(RTLSimError, match="unbalanced"):
+        parse_verilog(src)
+
+
+# ----------------------------------------------------------------------
+# cycle accuracy
+# ----------------------------------------------------------------------
+def test_register_fill_latency_and_stream_alignment():
+    prog = _toy_program()
+    v = emit_verilog(prog, "toy", max_delay_per_stage=1)
+    rep = pipeline(prog, 1)
+    sim = RTLSimulator(v)
+    assert sim.module.latency_cycles == rep.latency_cycles == 2
+    rng = np.random.default_rng(7)
+    x = rng.integers(-128, 128, size=(32, 2), dtype=np.int64)
+    want = prog.evaluate(x)
+
+    # streamed API: aligned, bit-exact
+    res = sim.run_stream(x)
+    assert np.array_equal(res.y, want)
+    assert res.n_cycles == 32 + 2
+    assert res.accounting()["stage_register_bits"] == [25, 28]
+    assert sum(res.accounting()["stage_register_bits"]) == rep.ff_bits
+
+    # manual stepping proves WHEN outputs appear: y(t) == f(x(t-2)),
+    # with the reset state (zeros) flushing out during fill
+    sim.reset()
+    seen = [sim.step(x[t]) for t in range(6)]
+    zero_resp = prog.evaluate(np.zeros(2, dtype=np.int64))
+    assert np.array_equal(seen[0], zero_resp)  # cycle 0: reset state
+    for t in (2, 3, 4, 5):
+        assert np.array_equal(seen[t], want[t - 2])
+
+
+def test_multistage_carry_chain_mdps1():
+    m = np.random.default_rng(3).integers(-64, 64, size=(6, 6))
+    sol = solve_cmvm(m, config=SolverConfig(dc=-1))
+    rep = pipeline(sol.program, 1)
+    assert rep.n_stages >= 3  # actually exercises multi-stage carries
+    v = emit_verilog(sol.program, "chain", max_delay_per_stage=1)
+    sim = RTLSimulator(v)
+    x = np.random.default_rng(4).integers(-128, 128, size=(40, 6), dtype=np.int64)
+    assert np.array_equal(sim.run_stream(x).y, sol.program.evaluate(x))
+
+
+def test_lane_parallel_streams():
+    """Lanes are independent module instances clocked in lockstep."""
+    prog = _toy_program()
+    sim = RTLSimulator(emit_verilog(prog, "toy", max_delay_per_stage=2))
+    x = np.random.default_rng(5).integers(-128, 128, size=(10, 3, 2), dtype=np.int64)
+    y = sim.run_stream(x).y
+    want = prog.evaluate(x)
+    assert y.shape == want.shape
+    assert np.array_equal(y, want)
+
+
+# ----------------------------------------------------------------------
+# emission regressions surfaced by co-sim
+# ----------------------------------------------------------------------
+def test_unsigned_interval_gets_explicit_sign_bit():
+    """Non-negative intervals on signed wires need width+1 (the co-sim
+    caught 255 wrapping to -1 on an 8-bit signed port)."""
+    p = DAISProgram()
+    qu = QInterval.from_fixed(False, 8, 8)
+    a = p.add_input(qu)
+    b = p.add_input(qu)
+    s = p.add_op(a, b, 0, 0, 1)
+    p.outputs = [Term(1, s, 0)]
+    v = emit_verilog(p, "uns", max_delay_per_stage=None)
+    assert "input wire signed [8:0] x0" in v
+    assert "output wire signed [9:0] y0" in v
+    x = np.random.default_rng(2).integers(0, 256, size=(64, 2), dtype=np.int64)
+    assert np.array_equal(RTLSimulator(v).run_combinational(x), p.evaluate(x))
+
+
+def test_narrow_signed_port_diverges_is_detected():
+    """The simulator must IMPLEMENT wrapping, not paper over it: the
+    pre-fix 8-bit-signed-port module really diverges from the
+    interpreter on unsigned data (this is the bug the width fix
+    removed, kept as a canary that the sim has teeth)."""
+    src = """
+module narrow (
+  input wire signed [7:0] x0,
+  input wire signed [7:0] x1,
+  output wire signed [8:0] y0
+);
+  wire signed [8:0] s;
+  assign s = x0 + x1;
+  assign y0 = s;
+endmodule
+"""
+    sim = RTLSimulator(src)
+    x = np.array([[255, 1]], dtype=np.int64)  # 255 wraps to -1 on the port
+    assert sim.run_combinational(x)[0, 0] == 0  # RTL truth
+    assert 255 + 1 == 256  # what the integer model would say
+
+
+def test_negative_shift_output_regression_vectors():
+    """Fractional fixed point: terms with shift < 0 emit (src >>> k) and
+    -(src >>> k); pinned vectors cover both signs and odd residues."""
+    p = DAISProgram()
+    q = QInterval.from_fixed(True, 10, 4)
+    a = p.add_input(q)
+    b = p.add_input(q)
+    s = p.add_op(a, b, 0, 1, -1)
+    p.outputs = [Term(-1, s, -2), Term(1, s, -1)]
+    v = emit_verilog(p, "nshift", max_delay_per_stage=None)
+    assert "(v2_s0 >>> 2)" in v and "(v2_s0 >>> 1)" in v
+    sim = RTLSimulator(v)
+    x = np.array(
+        [[-512, 511], [511, -512], [-1, 1], [3, -3], [7, 5], [-511, -512]],
+        dtype=np.int64,
+    )
+    got = sim.run_combinational(x)
+    want = p.evaluate(x)
+    assert np.array_equal(got, want)
+    # floor-shift semantics pinned explicitly: -3 >> 1 == -2, not -1
+    sm = x[:, 0] - 2 * x[:, 1]
+    assert np.array_equal(want[:, 1], sm >> 1)
+    assert np.array_equal(want[:, 0], -(sm >> 2))
+
+
+def test_output_row_consumed_by_later_stage_op():
+    """last_use regression (found by the rtlsim property sweep): an
+    output row that also feeds an op in a LATER stage than any output
+    must keep its stage-carry register — the old code clobbered
+    last_use down to the output stage, the register vanished, and the
+    late op read a value one cycle too new (rtlsim rejects the result
+    as an unbalanced pipeline)."""
+    p = DAISProgram()
+    q8 = QInterval.from_fixed(True, 8, 8)
+    i0 = p.add_input(q8)
+    i1 = p.add_input(q8)
+    r2 = p.add_op(i0, i1, 0, 2, 1)
+    r3 = p.add_op(r2, r2, 1, 0, 1)
+    r4 = p.add_op(r3, r2, 1, 0, -1)
+    p.add_op(i0, r4, 0, 1, -1)  # stage-1 op consuming input i0; not an output
+    p.outputs = [Term(1, i0, 0)]  # the output is the stage-0 input itself
+    v = emit_verilog(p, "lu", max_delay_per_stage=2)
+    mod = parse_verilog(v)  # pre-fix: RTLSimError("unbalanced pipeline")
+    assert "v0_s1" in mod.signals  # the carry register survives
+    sim = RTLSimulator(mod)
+    x = np.random.default_rng(8).integers(-128, 128, size=(16, 2), dtype=np.int64)
+    assert np.array_equal(sim.run_stream(x).y, p.evaluate(x))
+
+
+def test_zero_output_column():
+    m = np.array([[3, 0, -5], [7, 0, 2]])
+    rep = cosim_case(m, strategy="da", engine="batch", max_delay_per_stage=2,
+                     n_vectors=32, seed=11, jit="skip")
+    assert rep["bit_exact"] and rep["latency_ok"]
+    assert rep["mismatches_per_output"] == [0, 0, 0]
+
+
+# ----------------------------------------------------------------------
+# co-sim harness
+# ----------------------------------------------------------------------
+def test_cosim_program_report_shape():
+    rep = cosim_program(_toy_program(), max_delay_per_stage=2, n_vectors=16,
+                        seed=1, jit="skip")
+    assert rep["bit_exact"] and rep["latency_ok"]
+    assert rep["n_stages"] == 2
+    assert rep["accounting"]["latency_cycles"] == 1
+    assert rep["accounting"]["ii"] == 1
+    assert rep["accounting"]["register_bits"] == sum(
+        rep["accounting"]["stage_register_bits"]
+    )
+
+
+@pytest.mark.parametrize("strategy,engine", [("da", "batch"), ("da", "heap"),
+                                             ("da", "arena"), ("latency", None)])
+@pytest.mark.parametrize("mdps", [1, None])
+def test_cosim_strategy_engine_grid(strategy, engine, mdps):
+    m = np.random.default_rng(9).integers(-32, 32, size=(4, 4))
+    rep = cosim_case(m, strategy=strategy, engine=engine or "batch",
+                     max_delay_per_stage=mdps, n_vectors=48, seed=13, jit="skip")
+    assert rep["bit_exact"], rep
+    assert rep["latency_ok"], rep
+
+
+def test_cosim_jit_three_way():
+    """The third leg: jitted integer forward, bit-exact with the others."""
+    pytest.importorskip("jax")
+    m = np.random.default_rng(21).integers(-64, 64, size=(5, 3))
+    rep = cosim_case(m, strategy="da", engine="batch", max_delay_per_stage=3,
+                     n_vectors=32, seed=17, jit="require")
+    assert rep["jit"]["status"] == "checked"
+    assert rep["jit"]["bit_exact"]
+    assert rep["bit_exact"] and rep["latency_ok"]
+
+
+def test_default_grid_covers_required_axes():
+    cases = default_grid()
+    names = [c["name"] for c in cases]
+    assert any("zeroneg" in n for n in names)
+    assert any("unsigned" in n for n in names)
+    assert any("fracgrid" in n for n in names)
+    assert any("comb" in n for n in names) and any("-p1" in n for n in names)
+    for eng in ("batch", "heap", "arena", "tree"):
+        assert any(f"-{eng}-" in n for n in names), eng
+    # every case must carry a distinct name (gate keys off names)
+    assert len(set(names)) == len(names)
+
+
+def test_external_leg_skips_loudly_without_tools(capsys):
+    if external_tool() is not None:
+        pytest.skip("external simulator present; skip-path not reachable")
+    p = _toy_program()
+    v = emit_verilog(p, "toy", max_delay_per_stage=None)
+    x = np.zeros((2, 2), dtype=np.int64)
+    rep = run_external(v, "toy", x, p.evaluate(x), 0, mode="auto")
+    assert rep["status"] == "skipped"
+    assert "SKIP" in capsys.readouterr().out
+    with pytest.raises(RuntimeError, match="no external simulator"):
+        run_external(v, "toy", x, p.evaluate(x), 0, mode="require")
