@@ -1,0 +1,316 @@
+"""Observability bench: exercise the telemetry layer end to end.
+
+Two legs, both gated (``passed`` folds every check into the exit code):
+
+  solver leg  (numpy-only — runs in the minimal smoke environment)
+      Solve one small CMVM twice, tracing disabled then enabled, and
+      assert (a) bit-identity — tracing must never perturb solver
+      decisions; (b) the enabled run produced spans on the expected
+      names (``solver.solve_cmvm``, ``cse.*``); (c) the Chrome-trace
+      export is schema-valid (every ``X`` event carries
+      name/ph/ts/dur/pid/tid, thread-name ``M`` metadata present);
+      (d) the process metrics registry renders parseable Prometheus
+      text containing the ``cse_*`` counter families; (e) the solve
+      log ring captured structured records for both solves.
+
+  serve leg   (needs jax; skipped automatically when absent or with
+      ``--no-serve``)
+      ``Flow.compile`` a 2-layer model and serve a short burst under
+      tracing, then assert the merged trace spans at least three
+      threads (main + solve pool + dispatcher shards), the flight
+      recorder holds per-request records with full 5-stage breakdowns,
+      and ``Deployment.metrics_text()`` is parseable Prometheus
+      covering the serve families.
+
+``--json PATH`` writes the result dict; the trace document and the
+Prometheus text land next to it as ``PATH-trace.json`` /
+``PATH-metrics.prom`` (the per-SHA CI artifacts).  Exit code 1 on any
+failed check.  No committed baseline: every check is deterministic or
+self-relative, so there is no trajectory to track.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+import time
+
+import numpy as np
+
+# `name{labels} value` or `name value` — the subset of the Prometheus
+# text exposition format our renderer emits (one sample per line)
+_PROM_SAMPLE = re.compile(
+    r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [^ ]+$"
+)
+
+_REQUIRED_X_KEYS = ("name", "ph", "ts", "dur", "pid", "tid")
+
+
+def _validate_trace_doc(doc: dict) -> dict:
+    """Schema checks a Perfetto/chrome://tracing load would require."""
+    events = doc.get("traceEvents", [])
+    xs = [e for e in events if e.get("ph") == "X"]
+    ms = [e for e in events if e.get("ph") == "M"]
+    x_ok = bool(xs) and all(all(k in e for k in _REQUIRED_X_KEYS) for e in xs)
+    ts_ok = all(
+        isinstance(e["ts"], (int, float)) and isinstance(e["dur"], (int, float))
+        for e in xs
+    )
+    return {
+        "n_events": len(events),
+        "n_spans": len(xs),
+        "n_threads": len({e["tid"] for e in xs}),
+        "span_names": sorted({e["name"] for e in xs}),
+        "schema_ok": bool(x_ok and ts_ok and ms),
+    }
+
+
+def _validate_prometheus(text: str, required: tuple) -> dict:
+    """Line-format check + presence of the required metric families."""
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    samples = [ln for ln in lines if not ln.startswith("#")]
+    fmt_ok = bool(samples) and all(_PROM_SAMPLE.match(ln) for ln in samples)
+    names = {ln.split("{")[0].split(" ")[0] for ln in samples}
+    missing = [r for r in required if not any(n.startswith(r) for n in names)]
+    return {
+        "n_samples": len(samples),
+        "format_ok": fmt_ok,
+        "missing_families": missing,
+        "ok": bool(fmt_ok and not missing),
+    }
+
+
+def _solver_leg(m: int = 24, bw: int = 8, seed: int = 0) -> dict:
+    from repro.core import solve_cmvm
+    from repro.flow import SolverConfig
+    from repro.obs import solvelog, trace
+    from repro.obs.metrics import get_registry
+
+    mat = np.random.default_rng(seed).integers(
+        -(2 ** (bw - 1)), 2 ** (bw - 1), size=(m, m)
+    )
+    cfg = SolverConfig(dc=2, engine="arena")
+    was = trace.enabled()
+    reg = get_registry()
+    try:
+        trace.set_enabled(False)
+        trace.reset()
+        solvelog.reset()
+        reg.reset()
+        t0 = time.perf_counter()
+        ref = solve_cmvm(mat, config=cfg)
+        disabled_s = time.perf_counter() - t0
+        n_events_disabled = trace.n_events()
+
+        trace.set_enabled(True)
+        trace.reset()
+        t0 = time.perf_counter()
+        sol = solve_cmvm(mat, config=cfg)
+        enabled_s = time.perf_counter() - t0
+        doc = trace.export()
+    finally:
+        trace.set_enabled(was)
+        trace.reset()
+
+    tr = _validate_trace_doc(doc)
+    prom = _validate_prometheus(
+        reg.to_prometheus(), ("cse_runs_total", "cse_patterns_implemented_total")
+    )
+    logs = solvelog.records()
+    expected = {"solver.solve_cmvm", "cse.pair_build", "cse.select"}
+    return {
+        "m": m,
+        "identical": (sol.n_adders, sol.cost_bits)
+        == (ref.n_adders, ref.cost_bits),
+        "disabled_s": disabled_s,
+        "enabled_s": enabled_s,
+        "noop_clean": n_events_disabled == 0,
+        "spans_expected": sorted(expected - set(tr["span_names"])) == [],
+        "trace": tr,
+        "prometheus": prom,
+        "n_solve_logs": len(logs),
+        "solve_logs_ok": (
+            len(logs) >= 2
+            and all(r.get("adders") == ref.n_adders for r in logs[-2:])
+        ),
+        "ok": bool(
+            (sol.n_adders, sol.cost_bits) == (ref.n_adders, ref.cost_bits)
+            and n_events_disabled == 0
+            and not (expected - set(tr["span_names"]))
+            and tr["schema_ok"]
+            and prom["ok"]
+            and len(logs) >= 2
+        ),
+        "_doc": doc,
+        "_metrics_text": reg.to_prometheus(),
+    }
+
+
+def _serve_leg(m: int = 16, seed: int = 0, n_requests: int = 64) -> dict:
+    import jax
+
+    from repro.flow import CompileConfig, Flow, ServeConfig, SolverConfig
+    from repro.nn import QDense, QuantConfig, init_params
+    from repro.obs import trace
+
+    wq = QuantConfig(6, 2, signed=True)
+    model = (QDense(m, wq), QDense(m, wq))
+    in_shape = (m,)
+    in_quant = QuantConfig(8, 4, signed=True)
+    params, _ = init_params(jax.random.PRNGKey(seed), model, in_shape)
+
+    was = trace.enabled()
+    try:
+        trace.set_enabled(True)
+        trace.reset()
+        design = Flow.compile(
+            model, params, in_shape, in_quant,
+            config=CompileConfig(solver=SolverConfig(dc=2)),
+        )
+        dep = Flow.serve(ServeConfig(max_batch=32, max_wait_us=100.0, shards=2))
+        dep.register("obs", design)
+        dep.warmup("obs")
+        try:
+            rng = np.random.default_rng(seed + 1)
+            q = in_quant.qint
+            xs = [
+                np.asarray(rng.integers(q.lo, q.hi + 1, size=in_shape), np.int32)
+                for _ in range(n_requests)
+            ]
+            for f in [dep.submit("obs", x) for x in xs]:
+                f.result(30)
+            stats = dep.stats("obs")
+            metrics_text = dep.metrics_text()
+        finally:
+            dep.shutdown()
+        doc = trace.export()
+    finally:
+        trace.set_enabled(was)
+        trace.reset()
+
+    tr = _validate_trace_doc(doc)
+    prom = _validate_prometheus(
+        metrics_text,
+        ("serve_requests_total", "serve_batches_total", "serve_stage_us"),
+    )
+    flight = stats["flight"]
+    slowest = flight.get("slowest", [])
+    flight_ok = bool(
+        flight["n_records"] >= n_requests
+        and slowest
+        and all(len(s["stages_us"]) == 5 for s in slowest)
+    )
+    per_layer = design.solver_stats.get("per_layer", {})
+    serve_spans = {"compile.plan", "compile.solve_phase", "serve.batch"}
+    return {
+        "m": m,
+        "n_requests": n_requests,
+        "n_flight_records": flight["n_records"],
+        "slowest_lat_us": slowest[0]["lat_us"] if slowest else None,
+        "per_layer_names": sorted(per_layer),
+        "trace": tr,
+        "prometheus": prom,
+        "flight_ok": flight_ok,
+        "spans_expected": sorted(serve_spans - set(tr["span_names"])) == [],
+        "ok": bool(
+            tr["schema_ok"]
+            and tr["n_threads"] >= 3  # main + solve pool + dispatcher(s)
+            and not (serve_spans - set(tr["span_names"]))
+            and prom["ok"]
+            and flight_ok
+            and len(per_layer) == 2
+        ),
+        "_doc": doc,
+        "_metrics_text": metrics_text,
+    }
+
+
+def run(serve: bool | None = None, seed: int = 0) -> dict:
+    if serve is None:
+        try:
+            import jax  # noqa: F401
+
+            serve = True
+        except ImportError:
+            serve = False
+    solver = _solver_leg(seed=seed)
+    result = {
+        "bench": "obs_trace",
+        "solver": solver,
+        "serve": _serve_leg(seed=seed) if serve else None,
+        "serve_skipped": not serve,
+    }
+    result["ok"] = bool(
+        solver["ok"] and (result["serve"] is None or result["serve"]["ok"])
+    )
+    return result
+
+
+def passed(r: dict) -> bool:
+    return bool(r["ok"])
+
+
+def _pop_private(leg: dict | None):
+    if not leg:
+        return None, None
+    return leg.pop("_doc", None), leg.pop("_metrics_text", None)
+
+
+def main(csv: bool = True, json_path=None, serve: bool | None = None) -> dict:
+    r = run(serve=serve)
+    # side artifacts: prefer the serve leg's richer trace when it ran
+    rich = r["serve"] or r["solver"]
+    doc, metrics_text = rich.get("_doc"), rich.get("_metrics_text")
+    for leg in (r["solver"], r["serve"]):
+        _pop_private(leg)
+    if csv:
+        s = r["solver"]
+        print("name,us_per_call,derived")
+        print(
+            f"obs_trace_solver,{s['enabled_s']*1e6:.0f},"
+            f"identical={int(s['identical'])};noop_clean={int(s['noop_clean'])};"
+            f"spans={s['trace']['n_spans']};schema_ok={int(s['trace']['schema_ok'])};"
+            f"prom_ok={int(s['prometheus']['ok'])};solve_logs={s['n_solve_logs']}"
+        )
+        v = r["serve"]
+        if v:
+            print(
+                f"obs_trace_serve,{v['slowest_lat_us'] or 0:.0f},"
+                f"threads={v['trace']['n_threads']};spans={v['trace']['n_spans']};"
+                f"flight_records={v['n_flight_records']};"
+                f"flight_ok={int(v['flight_ok'])};"
+                f"prom_ok={int(v['prometheus']['ok'])};"
+                f"per_layer={','.join(v['per_layer_names'])}"
+            )
+        else:
+            print("obs_trace_serve,0,skipped=1 (jax unavailable)")
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", file=sys.stderr)
+        base = json_path.rsplit(".json", 1)[0]
+        if doc is not None:
+            with open(base + "-trace.json", "w") as fh:
+                json.dump(doc, fh)
+            print(f"# wrote {base}-trace.json", file=sys.stderr)
+        if metrics_text is not None:
+            with open(base + "-metrics.prom", "w") as fh:
+                fh.write(metrics_text)
+            print(f"# wrote {base}-metrics.prom", file=sys.stderr)
+    return r
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    json_path = None
+    serve = None
+    if "--json" in args:
+        k = args.index("--json")
+        json_path = args[k + 1]
+        del args[k : k + 2]
+    if "--no-serve" in args:
+        args.remove("--no-serve")
+        serve = False
+    result = main(json_path=json_path, serve=serve)
+    sys.exit(0 if passed(result) else 1)

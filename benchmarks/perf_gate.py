@@ -63,7 +63,8 @@ def _index(result: dict) -> dict:
 
 def compare(fresh: dict, baseline: dict, tolerance: float = 0.2,
             floor_s: float = 1.0,
-            ratio_tolerance: float | None = None) -> list[str]:
+            ratio_tolerance: float | None = None,
+            trace_overhead_limit: float = 1.5) -> list[str]:
     """Return a list of violation messages (empty = gate passes)."""
     violations: list[str] = []
     fi, bi = _index(fresh), _index(baseline)
@@ -97,7 +98,46 @@ def compare(fresh: dict, baseline: dict, tolerance: float = 0.2,
         # a flat 20 points on top of the absolute tolerance
         ratio_tolerance = tolerance + 0.2
     violations += _ratio_check(fresh, baseline, fi, bi, ratio_tolerance)
+    violations += _tracing_check(fresh, trace_overhead_limit)
     return violations
+
+
+def _tracing_check(fresh: dict, limit: float) -> list[str]:
+    """Span-tracing gate on the fresh run's ``tracing`` section (older
+    baselines predate it, so only the fresh side is consulted):
+
+      * identity is deterministic — a traced solve that changes adders
+        or cost bits fails outright on any machine;
+      * enabled-mode overhead is gated loosely against ``limit`` (a
+        same-run ratio, machine-independent), with a 0.1 s absolute
+        floor on the enabled-minus-disabled delta so sub-noise gate
+        times on fast machines can't trip a ratio of tiny numbers.
+    """
+    tr = fresh.get("tracing")
+    if not tr:
+        return []
+    out: list[str] = []
+    if not tr.get("identical", True):
+        out.append(
+            "tracing: traced solve diverged from untraced gate run "
+            "(adders/cost_bits drift — deterministic)"
+        )
+    ratio = tr.get("overhead_ratio")
+    delta = tr.get("enabled_cpu_s", 0.0) - tr.get("disabled_cpu_s", 0.0)
+    if ratio is not None:
+        over = ratio > limit and delta > 0.1
+        status = "REGRESSION" if over else "ok"
+        print(
+            f"tracing: enabled/disabled ratio {ratio:.3f} "
+            f"(limit {limit:.2f}, delta {delta:+.3f}s, "
+            f"{tr.get('n_span_events', 0)} spans) {status}"
+        )
+        if over:
+            out.append(
+                f"tracing: enabled-mode overhead ratio {ratio:.3f} exceeds "
+                f"{limit:.2f} with {delta:.3f}s absolute cost"
+            )
+    return out
 
 
 def _ratio_check(fresh: dict, baseline: dict, fi: dict, bi: dict,
@@ -271,6 +311,10 @@ def main(argv=None) -> int:
     ap.add_argument("--p99-floor-ms", type=float, default=50.0,
                     help="never fail a serve p99 under this many ms "
                          "(noise floor; serve kind only)")
+    ap.add_argument("--trace-overhead-limit", type=float, default=1.5,
+                    help="max enabled-tracing/untraced CPU-seconds ratio "
+                         "on the solver gate point (loose; identity is "
+                         "gated separately and exactly; solver kind only)")
     args = ap.parse_args(argv)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
@@ -290,7 +334,8 @@ def main(argv=None) -> int:
         )
     else:
         violations = compare(
-            fresh, baseline, args.tolerance, args.floor_s, args.ratio_tolerance
+            fresh, baseline, args.tolerance, args.floor_s,
+            args.ratio_tolerance, args.trace_overhead_limit,
         )
     for v in violations:
         print(f"FAIL: {v}", file=sys.stderr)

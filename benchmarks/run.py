@@ -7,6 +7,7 @@
     solver_smoke            solver fast-path wall-clock budget check
     serve_load              artifact round-trip + microbatched serve load
     rtl_cosim               RTL co-simulation gate (three-way bit-exact)
+    obs_trace               telemetry layer gate (trace/metrics/flight)
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
@@ -55,6 +56,7 @@ def main() -> None:
         "smoke": "solver_smoke",
         "serve": "serve_load",
         "rtl": "rtl_cosim",
+        "obs": "obs_trace",
         "lm": "lm_step_bench",
     }
     failed = False
@@ -63,7 +65,7 @@ def main() -> None:
             continue
         mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        if name in ("smoke", "serve", "rtl"):
+        if name in ("smoke", "serve", "rtl", "obs"):
             # gated benches: JSON artifact + exit-1 on budget/exactness
             # failure.  --json targets the explicitly selected bench
             # (or smoke, the historical default, when running all).

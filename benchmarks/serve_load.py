@@ -256,6 +256,9 @@ def _measure(design, mode, samples, duration_s, workers, window, target_rps,
         "mean_batch_occupancy": stats["mean_batch_occupancy"],
         "n_rejected": stats["n_rejected"],
         "per_stage": stats["per_stage"],
+        # cross-shard flight-recorder snapshot: the slowest-K requests with
+        # their full per-stage µs breakdowns (the p99 postmortem payload)
+        "flight": stats["flight"],
         "shard_consistency": _shard_consistency(stats),
         "engine_warmup_s": warmup_s,
     }
@@ -350,6 +353,7 @@ def run(
         "mean_batch_occupancy": sharded["mean_batch_occupancy"],
         "n_rejected": sharded["n_rejected"],
         "per_stage": sharded["per_stage"],
+        "flight": sharded["flight"],
         "shard_consistency": sharded["shard_consistency"],
         "single_dispatcher": single,
         "shard_speedup": (
@@ -401,10 +405,31 @@ def main(csv: bool = True, json_path=None, **kw) -> dict:
             f"rollout_ok={int(r['rollout']['ok'])};"
             f"rollout_v{r['rollout']['from_version']}to{r['rollout']['to_version']}"
         )
+        slowest = r["flight"].get("slowest", [])
+        if slowest:
+            # the flight recorder's p99 postmortem: where the single
+            # slowest request of the measured phase spent its time
+            s = slowest[0]
+            stages = ";".join(
+                f"{k}_us={v:.0f}" for k, v in s["stages_us"].items()
+            )
+            print(
+                f"serve_load_slowest,{s['lat_us']:.0f},"
+                f"trace_id={s['trace_id']};shard={s['shard']};"
+                f"bucket={s['bucket']};batch={s['batch_size']};{stages}"
+            )
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(r, fh, indent=2, sort_keys=True)
         print(f"# wrote {json_path}", file=sys.stderr)
+        from repro.obs import trace
+
+        if trace.enabled():
+            # merged Perfetto timeline for this run (compile + solve pool
+            # + every dispatcher shard), next to the JSON report
+            tpath = json_path.rsplit(".json", 1)[0] + "-trace.json"
+            trace.export(tpath)
+            print(f"# wrote {tpath}", file=sys.stderr)
     return r
 
 

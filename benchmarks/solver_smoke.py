@@ -126,12 +126,65 @@ def run(sizes=SIZES, bw=8, seed=0, dc=-1, budget_s=DEFAULT_BUDGET_S,
         result["speedup_vs_seed_ref"] = SEED_REFERENCE_S / gate_seconds
         result["speedup_vs_pr1_ref"] = PR1_REFERENCE_S / gate_seconds
         result["speedup_vs_pr2_ref"] = PR2_REFERENCE_S / gate_seconds
+    if GATE_SIZE in sizes and GATE_ENGINE in engines:
+        result["tracing"] = _tracing_overhead(
+            result, bw=bw, seed=seed, dc=dc
+        )
     return result
+
+
+def _tracing_overhead(result: dict, bw: int, seed: int, dc: int) -> dict:
+    """Re-solve the gate point with span tracing ENABLED and compare.
+
+    Two checks ride on this (gated by ``perf_gate.py``):
+      * identity — the traced solve must produce the exact adders /
+        cost bits of the untraced gate run (deterministic on any
+        machine; tracing must never perturb solver decisions);
+      * overhead — enabled-mode CPU seconds over the untraced gate
+        time, reported as a ratio and gated loosely (the disabled-mode
+        cost is what the <1% claim is about, and that is exactly the
+        normal gate time already measured above).
+    """
+    from repro.obs import trace
+
+    gate_row = next(r for r in result["sizes"] if r["m"] == GATE_SIZE)
+    ref = gate_row["engines"][GATE_ENGINE]
+    mat = np.random.default_rng(seed).integers(
+        2 ** (bw - 1) + 1, 2**bw, size=(GATE_SIZE, GATE_SIZE)
+    )
+    was_enabled = trace.enabled()
+    trace.set_enabled(True)
+    try:
+        cpu_times = []
+        sol = None
+        for _ in range(2):
+            trace.reset()
+            c0 = time.process_time()
+            sol = solve_cmvm(mat, config=SolverConfig(dc=dc, engine=GATE_ENGINE))
+            cpu_times.append(time.process_time() - c0)
+        n_span_events = trace.n_events()
+    finally:
+        trace.set_enabled(was_enabled)
+        trace.reset()
+    enabled_s = min(cpu_times)
+    disabled_s = ref["cpu_seconds"]
+    return {
+        "disabled_cpu_s": disabled_s,
+        "enabled_cpu_s": enabled_s,
+        "overhead_ratio": (enabled_s / disabled_s) if disabled_s > 0 else 1.0,
+        "n_span_events": n_span_events,
+        "identical": (sol.n_adders, sol.cost_bits)
+        == (ref["adders"], ref["cost_bits"]),
+    }
 
 
 def passed(r: dict) -> bool:
     return bool(
-        r["within_budget"] and r["verified"] and r["engines_identical"]
+        r["within_budget"]
+        and r["verified"]
+        and r["engines_identical"]
+        # tracing must never change what the solver produces
+        and r.get("tracing", {}).get("identical", True)
     )
 
 
@@ -155,6 +208,14 @@ def main(csv=True, json_path=None):
             f"speedup_vs_seed_ref={r.get('speedup_vs_seed_ref', 0):.1f}x;"
             f"speedup_vs_pr2_ref={r.get('speedup_vs_pr2_ref', 0):.2f}x"
         )
+        tr = r.get("tracing")
+        if tr:
+            print(
+                f"solver_smoke_tracing,{tr['enabled_cpu_s']*1e6:.0f},"
+                f"overhead_ratio={tr['overhead_ratio']:.3f};"
+                f"identical={int(tr['identical'])};"
+                f"n_span_events={tr['n_span_events']}"
+            )
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(r, fh, indent=2, sort_keys=True)

@@ -106,6 +106,8 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import trace
+from ..obs.metrics import get_registry
 from .cost import min_tree_depth_hist, min_tree_depth_hist_batch, overlap_bits  # noqa: F401
 from .csd import to_csd
 from .dais import DAISProgram, Term
@@ -754,6 +756,10 @@ class CSEStats:
     # heap: pops that had to correct or discard a stale entry)
     n_tier_reloads: int = 0
     n_stale_corrections: int = 0
+    # observability: candidate-tier compactions this run, and arena
+    # buffer-growth events charged to this run (0 for heap/batch)
+    n_compactions: int = 0
+    n_arena_reallocs: int = 0
 
 
 class CSE:
@@ -791,6 +797,7 @@ class CSE:
                 ar.acquire(owner=self)
             self.arena = ar
             self._arena_owned = True
+            self._arena_reallocs0 = ar.n_reallocs
             alloc = ar.col_alloc
         # beyond-paper: under tight delay budgets, prefer subexpressions
         # with shallow operands (they leave headroom for further reuse
@@ -867,7 +874,8 @@ class CSE:
         self._meta_zero = np.zeros(0, dtype=bool)
 
         if build_counts:
-            self._build_initial_counts()
+            with trace.span("cse.pair_build", engine=engine, n_cols=len(coeff_cols)):
+                self._build_initial_counts()
 
     # ------------------------------------------------------------------
     # Weights (static per key: operand qints are fixed at row creation)
@@ -1063,6 +1071,7 @@ class CSE:
         the rest tier (their cached scores are upper bounds, so folding
         them into the stale bound keeps selection exact) — the running-max
         scan stays O(_TIER) for the whole run."""
+        self.stats.n_compactions += 1
         if self.engine == "arena":
             self._compact_arena(m)
             return
@@ -1319,18 +1328,38 @@ class CSE:
     # ------------------------------------------------------------------
     def run(self) -> list[Optional[Term]]:
         try:
-            if self.engine == "heap":
-                self._run_heap()
-            else:
-                self._run_batch()
-            return self._assemble()
+            with trace.span("cse.select", engine=self.engine):
+                if self.engine == "heap":
+                    self._run_heap()
+                else:
+                    self._run_batch()
+            with trace.span("cse.assemble", engine=self.engine):
+                return self._assemble()
         finally:
             if self._arena_owned:
+                self.stats.n_arena_reallocs = (
+                    self.arena.n_reallocs - self._arena_reallocs0
+                )
                 # hand the workspace back for the next solve on this
                 # thread; the stores' windows become reusable, so a CSE
                 # must not be mutated after run() (solve_cmvm never does)
                 self.arena.release()
                 self._arena_owned = False
+            self._emit_counters()
+
+    def _emit_counters(self) -> None:
+        """Fold this run's CSEStats into the process metrics registry
+        (one dict update per solve — nowhere near the hot path)."""
+        st = self.stats
+        reg = get_registry()
+        eng = self.engine
+        reg.inc("cse_runs_total", 1, engine=eng)
+        reg.inc("cse_patterns_implemented_total", st.n_patterns_implemented, engine=eng)
+        reg.inc("cse_occurrences_replaced_total", st.n_occurrences_replaced, engine=eng)
+        reg.inc("cse_compactions_total", st.n_compactions, engine=eng)
+        reg.inc("cse_tier_reloads_total", st.n_tier_reloads, engine=eng)
+        if st.n_arena_reallocs:
+            reg.inc("cse_arena_reallocs_total", st.n_arena_reallocs, engine=eng)
 
     def _run_heap(self) -> None:
         """Exact lazy max-heap realisation of the selection rule."""

@@ -21,6 +21,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..flow.config import UNSET, SolverConfig, resolve_legacy
+from ..obs import solvelog, trace
 from .cache import SolutionCache, solve_key
 from .cost import ceil_log2, min_tree_depth
 from .csd import csd_nnz
@@ -189,7 +190,35 @@ def _solve_cmvm(
     input_rows: Optional[Sequence[int]] = None,
     cache: Optional[SolutionCache] = None,
 ) -> Solution:
-    """Config-consuming solver core (all public paths delegate here)."""
+    """Config-consuming solver core (all public paths delegate here).
+
+    Wraps the implementation in a ``solver.solve_cmvm`` trace span (a
+    no-op unless ``REPRO_TRACE`` is on) and appends one structured
+    record per solve to :mod:`repro.obs.solvelog`.
+    """
+    shape = getattr(m, "shape", (0, 0))
+    with trace.span(
+        "solver.solve_cmvm",
+        d_in=int(shape[0]),
+        d_out=int(shape[1]) if len(shape) > 1 else 1,
+        engine=getattr(cfg, "engine", "?"),
+        dc=getattr(cfg, "dc", None),
+    ):
+        return _solve_cmvm_impl(
+            m, qint_in, depth_in, cfg,
+            program=program, input_rows=input_rows, cache=cache,
+        )
+
+
+def _solve_cmvm_impl(
+    m: np.ndarray,
+    qint_in: Optional[Sequence[QInterval]],
+    depth_in: Optional[Sequence[int]],
+    cfg: SolverConfig,
+    program: Optional[DAISProgram] = None,
+    input_rows: Optional[Sequence[int]] = None,
+    cache: Optional[SolutionCache] = None,
+) -> Solution:
     if not isinstance(cfg, SolverConfig):
         from ..flow.config import ConfigError
 
@@ -220,6 +249,7 @@ def _solve_cmvm(
             hit = cache.get(key)
             if hit is not None:
                 hit.out_scale_exp = scale_exp
+                _log_solve_record(hit, m_int, cfg, time.perf_counter() - t0, True)
                 return hit
         input_rows = [program.add_input(q, d) for q, d in zip(qint_in, depth_in)]
     else:
@@ -233,7 +263,8 @@ def _solve_cmvm(
     use_decomp = decompose_stage and dc != 0 and d_out > 1
     stats: dict = {"engine": engine}
     if use_decomp:
-        dec = decompose(m_int, dc)
+        with trace.span("solver.decompose", d_in=d_in, d_out=d_out):
+            dec = decompose(m_int, dc)
         stats["decomposition_trivial"] = dec.is_trivial
         stats["m1_cols"] = int(dec.m1.shape[1])
         if dec.is_trivial:
@@ -302,7 +333,33 @@ def _solve_cmvm(
     sol = Solution(pruned, m_int, scale_exp, dc, dt, use_decomp, stats)
     if key is not None:
         cache.put(key, sol)
+    _log_solve_record(sol, m_int, cfg, dt, False)
     return sol
+
+
+def _log_solve_record(
+    sol: Solution, m_int: np.ndarray, cfg: SolverConfig,
+    wall_s: float, cache_hit: bool,
+) -> None:
+    """One flat per-solve record (matrix stats -> outcome) for the
+    resource-predictor training log (repro.obs.solvelog)."""
+    solvelog.log_solve(
+        {
+            "kind": "cmvm",
+            "engine": cfg.engine,
+            "dc": cfg.dc,
+            "decomposed": bool(sol.decomposed),
+            "d_in": int(m_int.shape[0]),
+            "d_out": int(m_int.shape[1]),
+            "nnz": int(np.count_nonzero(m_int)),
+            "w_max_abs": int(np.abs(m_int).max()) if m_int.size else 0,
+            "adders": int(sol.n_adders),
+            "cost_bits": int(sol.cost_bits),
+            "depth": int(sol.depth),
+            "wall_s": wall_s,
+            "cache_hit": cache_hit,
+        }
+    )
 
 
 def config_solve_key(

@@ -258,6 +258,11 @@ class Deployment:
             return s
         return {n: self.stats(n) for n in self.models()}
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition over every live engine entry
+        (``{name}@v{version}`` keys; see ``ServeEngine.metrics_text``)."""
+        return self.engine.metrics_text()
+
     # -- lifecycle -----------------------------------------------------
     def shutdown(self, timeout: float = 5.0) -> None:
         self.engine.shutdown(timeout)

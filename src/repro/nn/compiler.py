@@ -39,6 +39,7 @@ from ..core.solver import (
 )
 from ..flow.config import UNSET, CompileConfig, SolverConfig, resolve_legacy
 from ..kernels.adder_graph import adder_graph_apply, compile_tables
+from ..obs import trace
 from .layers import (
     AvgPool2D,
     Flatten,
@@ -424,6 +425,7 @@ def _solve_slots(
     slots: list[_SolveSlot],
     jobs: Optional[int],
     cache: Optional[SolutionCache],
+    slot_names: Optional[dict[int, list[str]]] = None,
 ) -> dict:
     """Resolve the deferred CMVM solves: cache first, then the remaining
     misses in a thread pool.
@@ -446,24 +448,36 @@ def _solve_slots(
     """
     t0 = time.perf_counter()
     cache_before = cache.stats.as_dict() if cache is not None else None
+    names = slot_names or {}
+    slot_wall: dict[int, float] = {}
+    slot_hit: dict[int, bool] = {}
     n_hits = 0
     misses: list[_SolveSlot] = []
     for slot in slots:
         if cache is not None:
+            th0 = time.perf_counter()
             slot.key = _slot_key(slot)
             hit = cache.get(slot.key)
             if hit is not None:
                 slot.solution = hit
+                slot_wall[slot.idx] = time.perf_counter() - th0
+                slot_hit[slot.idx] = True
                 n_hits += 1
                 continue
         misses.append(slot)
     n_pool = 0
     fallback: Optional[str] = None
     if misses:
-        payloads = [
-            (s.w_int, s.qin, s.strategy, s.solver_cfg.to_dict()) for s in misses
+        # (payload, label) units: the label names the solve's trace span
+        # and keys the per-slot wall time (satellite per-layer stats)
+        work = [
+            (
+                (s.w_int, s.qin, s.strategy, s.solver_cfg.to_dict()),
+                names.get(s.idx, [f"slot{s.idx}"])[0],
+            )
+            for s in misses
         ]
-        results: Optional[list[Solution]] = None
+        results: Optional[list[tuple[Solution, float]]] = None
         jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
         if jobs_eff == 1:
             fallback = "jobs=1"
@@ -475,15 +489,17 @@ def _solve_slots(
                 with concurrent.futures.ThreadPoolExecutor(
                     workers, thread_name_prefix="da4ml-solve"
                 ) as ex:
-                    results = list(ex.map(solve_task, payloads))
+                    results = list(ex.map(_timed_solve_task, work))
                 n_pool = len(results)
             except Exception as e:  # pool unavailable: loud serial fallback
                 results = None
                 fallback = f"thread_pool_error: {type(e).__name__}: {e}"
         if results is None:
-            results = [solve_task(p) for p in payloads]
-        for slot, sol in zip(misses, results):
+            results = [_timed_solve_task(w) for w in work]
+        for slot, (sol, wall) in zip(misses, results):
             slot.solution = sol
+            slot_wall[slot.idx] = wall
+            slot_hit[slot.idx] = False
             if cache is not None:
                 cache.put(slot.key, sol)
     else:
@@ -495,6 +511,7 @@ def _solve_slots(
         "pool_fallback": fallback,
         "solver_time_s": sum(s.solution.solver_time_s for s in slots),
         "solve_phase_s": time.perf_counter() - t0,
+        "per_layer": _per_layer_stats(slots, names, slot_wall, slot_hit),
     }
     if cache is not None:
         # per-compile delta of the cache counters (hits/misses/puts/
@@ -503,6 +520,45 @@ def _solve_slots(
         after = cache.stats.as_dict()
         stats["cache_stats"] = {k: after[k] - cache_before[k] for k in after}
     return stats
+
+
+def _timed_solve_task(work: tuple) -> tuple[Solution, float]:
+    """One pool unit: solve + wall time, under a labelled trace span so
+    the Perfetto timeline shows which layer each pool thread solved."""
+    payload, label = work
+    t0 = time.perf_counter()
+    with trace.span("compile.solve", layer=label):
+        sol = solve_task(payload)
+    return sol, time.perf_counter() - t0
+
+
+def _per_layer_stats(
+    slots: list[_SolveSlot],
+    names: dict[int, list[str]],
+    slot_wall: dict[int, float],
+    slot_hit: dict[int, bool],
+) -> dict:
+    """Per-layer solve attribution: wall seconds and cache hit/miss keyed
+    by layer name (layers deduplicated onto one slot each get an entry
+    pointing at the shared slot)."""
+    per_layer: dict[str, dict] = {}
+    for slot in slots:
+        layer_names = names.get(slot.idx, [f"slot{slot.idx}"])
+        sol = slot.solution
+        for nm in layer_names:
+            per_layer[nm] = {
+                "slot": slot.idx,
+                "shape": f"{slot.w_int.shape[0]}x{slot.w_int.shape[1]}"
+                if slot.w_int is not None
+                else "?",
+                "cache_hit": slot_hit.get(slot.idx, False),
+                "solve_wall_s": slot_wall.get(slot.idx, 0.0),
+                "adders": int(sol.n_adders) if sol is not None else 0,
+                "cost_bits": int(sol.cost_bits) if sol is not None else 0,
+                "depth": int(sol.depth) if sol is not None else 0,
+                "shared_slot": len(layer_names) > 1,
+            }
+    return per_layer
 
 
 # legacy kwarg name -> how it maps into CompileConfig
@@ -606,11 +662,20 @@ def _compile_model(
     shape = tuple(in_shape)
     qints = [in_quant.qint] * int(np.prod(shape))
     # plan
-    specs, shape, qints = _compile_seq(model, params, shape, qints, ctx)
+    with trace.span("compile.plan", n_layers=len(model)):
+        specs, shape, qints = _compile_seq(model, params, shape, qints, ctx)
+    # slot -> unique layer names ("dense0", "conv1", ... in layer order);
+    # layers deduplicated onto one slot contribute one name each
+    slot_names: dict[int, list[str]] = {}
+    for k, (slot, name, _shape_str, _nb, _bb) in enumerate(ctx.pending_reports):
+        slot_names.setdefault(slot.idx, []).append(f"{name}{k}")
     # solve
-    design.solver_stats = _solve_slots(ctx.slots, cfg.jobs, cfg.cache)
+    with trace.span("compile.solve_phase", n_slots=len(ctx.slots)):
+        design.solver_stats = _solve_slots(ctx.slots, cfg.jobs, cfg.cache, slot_names)
     design.solver_stats["engine"] = cfg.solver.engine
     # stitch
+    _stitch_span = trace.span("compile.stitch")
+    _stitch_span.__enter__()
     for slot, name, shape_str, n_bias, bias_bits in ctx.pending_reports:
         sol = slot.solution
         if slot.tables is None:
@@ -654,6 +719,7 @@ def _compile_model(
     design.steps = build_steps(specs, design.tables, cfg.use_pallas)
     design.out_shape = shape
     design.out_qints = qints
+    _stitch_span.__exit__(None, None, None)
     return design
 
 

@@ -55,6 +55,9 @@ import numpy as np
 
 from ..flow.config import UNSET, ServeConfig, resolve_legacy
 from ..nn.compiler import CompiledDesign
+from ..obs import trace
+from ..obs.flight import FlightRecorder
+from ..obs.metrics import Histogram, get_registry, render_prometheus
 from .artifact import load_design
 from .metrics import LatencyRecorder, StageAccumulator
 
@@ -79,12 +82,13 @@ class EngineClosedError(RuntimeError):
 
 
 class _Request:
-    __slots__ = ("slot", "t_submit", "future")
+    __slots__ = ("slot", "t_submit", "future", "tid")
 
-    def __init__(self, slot: int, t_submit: float, future: Future):
+    def __init__(self, slot: int, t_submit: float, future: Future, tid: int = 0):
         self.slot = slot
         self.t_submit = t_submit
         self.future = future
+        self.tid = tid  # per-shard trace id, stamped at enqueue
 
 
 def _default_buckets(max_batch: int) -> tuple[int, ...]:
@@ -136,6 +140,14 @@ class _Shard(threading.Thread):
 
         self.metrics = LatencyRecorder()
         self.stage = StageAccumulator()
+        # observability (single writer: this dispatcher thread) — per-stage
+        # µs histograms and the per-request flight recorder; trace ids are
+        # stamped at enqueue under the shard lock (shard idx in high bits
+        # keeps them unique across shards)
+        self.stage_hist = {s: Histogram() for s in StageAccumulator.STAGES}
+        self.flight = FlightRecorder(capacity=2048, slow_k=16)
+        self._tid_seq = itertools.count()
+        self._tid_base = idx << 40
         self.n_batches = 0
         self.n_rejected = 0  # guarded by self._lock (shared with submitters)
         self._occupancy_sum = 0.0
@@ -171,7 +183,9 @@ class _Shard(threading.Thread):
                 self._not_full.wait(0.05)
             slot = self._free.pop()
             self.slab[slot] = x
-            self._pending.append(_Request(slot, t_submit, fut))
+            self._pending.append(
+                _Request(slot, t_submit, fut, self._tid_base | next(self._tid_seq))
+            )
             self._not_empty.notify()
         return fut
 
@@ -201,7 +215,12 @@ class _Shard(threading.Thread):
                 for j in range(i, min(i + space, n)):
                     slot = self._free.pop()
                     self.slab[slot] = xs[j]
-                    self._pending.append(_Request(slot, t_submit, futs[j]))
+                    self._pending.append(
+                        _Request(
+                            slot, t_submit, futs[j],
+                            self._tid_base | next(self._tid_seq),
+                        )
+                    )
                 i = min(i + space, n)
                 self._not_empty.notify()
         for j in range(i, n):  # chunk tail cut off by a racing shutdown
@@ -215,7 +234,8 @@ class _Shard(threading.Thread):
         while True:
             batch, t_first = self._collect()
             if batch:
-                self._execute(batch, t_first)
+                with trace.span("serve.batch", shard=self.idx, n=len(batch)):
+                    self._execute(batch, t_first)
             elif self._stop.is_set():
                 break
         self._fail_pending()
@@ -309,7 +329,49 @@ class _Shard(threading.Thread):
         if not jc[b]:
             jc[b] = 1  # first dispatch of this shape compiled (any shard)
         self._occupancy_sum += n / b
-        self.stage.add("copy_out", time.perf_counter() - t_done)
+        t_out = time.perf_counter()
+        self.stage.add("copy_out", t_out - t_done)
+        self._observe_batch(claimed, lats, b, n, t_first, t_formed, t_pad, t_done, t_out)
+
+    def _observe_batch(
+        self, claimed, lats, b, n, t_first, t_formed, t_pad, t_done, t_out
+    ) -> None:
+        """Feed the per-stage histograms, the flight recorder, and the
+        process-registry gauges after a successful batch.  This thread is
+        the sole writer of all three, so the path stays lock-free; the
+        batch-shared stage times are charged to every request's flight
+        record while queue_wait stays per-request."""
+        bf_us = (t_formed - t_first) * 1e6
+        pad_us = (t_pad - t_formed) * 1e6
+        disp_us = (t_done - t_pad) * 1e6
+        out_us = (t_out - t_done) * 1e6
+        hists = self.stage_hist
+        hists["batch_form"].observe(bf_us)
+        hists["pad"].observe(pad_us)
+        hists["dispatch"].observe(disp_us)
+        hists["copy_out"].observe(out_us)
+        qh = hists["queue_wait"]
+        fl = self.flight
+        ts_us = t_done * 1e6
+        for r, lat in zip(claimed, lats):
+            qw_us = (t_formed - r.t_submit) * 1e6
+            qh.observe(qw_us)
+            fl.record(
+                r.tid, self.idx, b, n, lat * 1e6,
+                (qw_us, bf_us, pad_us, disp_us, out_us), ts_us=ts_us,
+            )
+        # unlocked reads: both lens are single CPython ops, and a gauge
+        # only needs to be approximately current
+        reg = get_registry()
+        model = self.runner.model_name
+        reg.set_gauge(
+            "serve_queue_depth", len(self._pending), model=model, shard=self.idx
+        )
+        reg.set_gauge(
+            "serve_slab_occupancy",
+            1.0 - len(self._free) / self.slab.shape[0],
+            model=model, shard=self.idx,
+        )
 
     # -- control -------------------------------------------------------
     def initiate_stop(self) -> None:
@@ -334,6 +396,7 @@ class _Shard(threading.Thread):
             ),
             "bucket_hits": {int(b): int(c) for b, c in self.bucket_hits.items()},
             "per_stage": self.stage.snapshot(),
+            "flight": self.flight.snapshot(),
         }
 
 
@@ -451,6 +514,9 @@ class _ModelRunner:
             per_stage=StageAccumulator.merged_snapshot(
                 [sh.stage for sh in self.shards]
             ),
+            # cross-shard flight view: overall slowest-K request records
+            # with their full per-stage breakdowns (p99 postmortems)
+            flight=FlightRecorder.merged([sh.flight for sh in self.shards]),
             shards=shard_snaps,
         )
         return s
@@ -622,6 +688,67 @@ class ServeEngine:
         with self._lock:
             runners = list(self._runners.items())
         return {n: r.stats() for n, r in runners}
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition (format 0.0.4) over every model.
+
+        Families are derived from the live runners — request/batch/reject
+        counters, per-shard queue-depth gauges, per-bucket hit counters,
+        per-stage wall totals and µs histograms, and latency-percentile
+        gauges — so scraping this endpoint and reading ``stats()`` can
+        never disagree.  Process-wide solver/compiler counters live in
+        ``repro.obs.metrics.get_registry()`` (exposed by
+        ``benchmarks/run.py obs``), not here, to avoid double counting.
+        """
+        with self._lock:
+            runners = list(self._runners.items())
+        req, batches, rejected, qd, bucket, jit = [], [], [], [], [], []
+        stage_tot, stage_hist, lat = [], [], []
+        for name, r in runners:
+            s = r.stats()
+            m = {"model": name}
+            req.append((m, s["n_requests"]))
+            batches.append((m, s["n_batches"]))
+            rejected.append((m, s["n_rejected"]))
+            jit.append((m, s["n_jit_compiles"]))
+            for snap in s["shards"]:
+                qd.append(
+                    ({"model": name, "shard": snap["shard"]}, snap["queue_depth"])
+                )
+            for b, c in s["bucket_hits"].items():
+                bucket.append(({"model": name, "bucket": b}, c))
+            for st in StageAccumulator.STAGES:
+                stage_tot.append(
+                    ({"model": name, "stage": st}, s["per_stage"][st]["total_ms"] / 1e3)
+                )
+                stage_hist.append(
+                    (
+                        {"model": name, "stage": st},
+                        Histogram.merged(sh.stage_hist[st] for sh in r.shards),
+                    )
+                )
+            if s["n_latency_samples"]:
+                for q in ("p50", "p99"):
+                    lat.append(({"model": name, "quantile": q}, s[f"{q}_ms"]))
+        families = [
+            ("serve_requests_total", "counter", "requests completed", req),
+            ("serve_batches_total", "counter", "batches dispatched", batches),
+            ("serve_rejected_total", "counter",
+             "requests rejected by backpressure", rejected),
+            ("serve_queue_depth", "gauge", "queued requests per shard", qd),
+            ("serve_bucket_hits_total", "counter",
+             "batches dispatched per bucket shape", bucket),
+            ("serve_jit_compiled_buckets", "gauge",
+             "bucket shapes jit-compiled so far", jit),
+            ("serve_stage_seconds_total", "counter",
+             "wall seconds charged per dispatch stage", stage_tot),
+            ("serve_stage_us", "histogram",
+             "per-stage wall microseconds per batch (queue_wait: per request)",
+             stage_hist),
+            ("serve_latency_ms", "gauge",
+             "end-to-end latency percentiles", lat),
+        ]
+        return render_prometheus(families)
 
     # -- lifecycle -----------------------------------------------------
     def shutdown(self, timeout: float = 5.0) -> None:

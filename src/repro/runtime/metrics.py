@@ -26,6 +26,7 @@ single-writer (one per shard) and merged at snapshot time.
 
 from __future__ import annotations
 
+import random
 import time
 from typing import Iterable, Optional, Sequence
 
@@ -49,6 +50,7 @@ def _reduce(lat: list, n_total: int, t_first: Optional[float],
     return {
         "n_requests": n_total,
         "n_latency_samples": len(lat),
+        "n_sampled_out": max(0, n_total - len(lat)),
         "window_s": span,
         "throughput_rps": (n_total / span) if span > 0 else 0.0,
         "p50_ms": percentile(lat, 50) * 1e3 if lat else float("nan"),
@@ -60,15 +62,28 @@ def _reduce(lat: list, n_total: int, t_first: Optional[float],
 
 
 class LatencyRecorder:
-    """Bounded per-request latency log with throughput bookkeeping."""
+    """Bounded per-request latency log with throughput bookkeeping.
 
-    def __init__(self, max_samples: int = 500_000):
+    Beyond ``max_samples`` the recorder switches to reservoir sampling
+    (Algorithm R, deterministic seed) so long soaks keep a uniform
+    sample over the *whole* window instead of freezing percentiles on
+    the first ``max_samples`` requests; ``n_sampled_out`` in snapshots
+    counts observations not currently held in the reservoir.
+    """
+
+    def __init__(self, max_samples: int = 500_000, seed: int = 0):
         self.max_samples = max_samples
+        self.seed = seed
+        self._rng = random.Random(seed)
         self._lat: list[float] = []
         self.n_total = 0
-        self.n_dropped = 0  # recorded beyond max_samples (counted, not stored)
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+
+    @property
+    def n_sampled_out(self) -> int:
+        """Observations seen but not currently held in the reservoir."""
+        return max(0, self.n_total - len(self._lat))
 
     def record(self, latency_s: float, now: Optional[float] = None) -> None:
         now = time.perf_counter() if now is None else now
@@ -79,30 +94,44 @@ class LatencyRecorder:
         if len(self._lat) < self.max_samples:
             self._lat.append(latency_s)
         else:
-            self.n_dropped += 1
+            # Algorithm R: keep the i-th observation with p = cap/i
+            j = self._rng.randrange(self.n_total)
+            if j < self.max_samples:
+                self._lat[j] = latency_s
 
     def record_many(self, latencies_s: Sequence[float],
                     now: Optional[float] = None) -> None:
         """Record one batch of latencies with a single timestamp — the
         dispatcher's per-batch path (one ``extend`` instead of a Python
-        call per request)."""
+        call per request until the reservoir fills)."""
         if not latencies_s:
             return
         now = time.perf_counter() if now is None else now
         if self.t_first is None:
             self.t_first = now
         self.t_last = now
-        self.n_total += len(latencies_s)
         room = self.max_samples - len(self._lat)
         if room >= len(latencies_s):
+            self.n_total += len(latencies_s)
             self._lat.extend(latencies_s)
-        else:
-            if room > 0:
-                self._lat.extend(latencies_s[:room])
-            self.n_dropped += len(latencies_s) - max(room, 0)
+            return
+        if room > 0:
+            self.n_total += room
+            self._lat.extend(latencies_s[:room])
+            latencies_s = latencies_s[room:]
+        rng = self._rng
+        cap = self.max_samples
+        lat = self._lat
+        n = self.n_total
+        for v in latencies_s:
+            n += 1
+            j = rng.randrange(n)
+            if j < cap:
+                lat[j] = v
+        self.n_total = n
 
     def reset(self) -> None:
-        self.__init__(self.max_samples)
+        self.__init__(self.max_samples, self.seed)
 
     def snapshot(self) -> dict:
         lat = list(self._lat)  # copy: recording may continue concurrently
