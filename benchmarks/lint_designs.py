@@ -1,0 +1,183 @@
+"""Design-lint bench: statically verify a compile smoke corpus.
+
+Compiles a small corpus spanning the layer/step vocabulary — dense MLPs
+across the full strategy x engine grid, a conv/pool net, and the
+mixer (residual + transpose + axis-dense) — then runs the strict tier of
+``repro.analysis.verify_design`` on every design, plus the artifact
+auditor on a save/load round trip and on any committed ``da4ml-design``
+artifacts found in the repository.  A final leg compiles a 64x64 dense
+layer with the default ``verify="cheap"`` gate and measures the
+verifier's share of the compile wall clock (from
+``solver_stats["verify"]["wall_s"]``), which must stay under 5%.
+
+``passed`` folds every check into the exit code: any error-severity
+diagnostic on any corpus design, any artifact-audit error, or a verify
+overhead above budget fails the job.  ``--json PATH`` (via
+``benchmarks.run lint --json``) writes the full diagnostics document —
+the per-SHA CI artifact the design-lint job archives.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# verify-overhead budget: cheap tier must cost <5% of a 64x64 compile
+OVERHEAD_BUDGET = 0.05
+
+
+def _corpus():
+    """(name, model builder, in_shape, in_quant, config) smoke corpus."""
+    from repro.flow import CompileConfig, SolverConfig
+    from repro.nn import (
+        AvgPool2D,
+        Flatten,
+        MaxPool2D,
+        QConv2D,
+        QDense,
+        QuantConfig,
+        ReLU,
+        models,
+    )
+
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    dense = (QDense(12, wq), ReLU(aq), QDense(5, wq))
+    conv = (
+        QConv2D(4, (3, 3), w_quant=wq), ReLU(aq), MaxPool2D((2, 2)),
+        AvgPool2D((2, 2)), Flatten(), QDense(3, wq),
+    )
+    mixer, mixer_shape, mixer_q = models.mlp_mixer_jet(
+        n_particles=4, n_features=4, d_ff=4
+    )
+
+    cases = []
+    for strategy in ("da", "latency"):
+        for engine in ("batch", "arena", "heap"):
+            cfg = CompileConfig(
+                strategy=strategy,
+                solver=SolverConfig(dc=2, engine=engine),
+                verify="off",  # the bench collects diagnostics itself
+            )
+            cases.append(
+                (f"dense[{strategy}/{engine}]", dense, (10,),
+                 QuantConfig(8, 4, signed=True), cfg)
+            )
+    base = CompileConfig(solver=SolverConfig(dc=2), verify="off")
+    cases.append(("conv[da/batch]", conv, (10, 10, 2),
+                  QuantConfig(8, 1, signed=False), base))
+    cases.append(("mixer[da/batch]", mixer, mixer_shape, mixer_q, base))
+    return cases
+
+
+def _verify_one(design_or_path, tier="strict") -> dict:
+    from repro.analysis import verify_design
+
+    rep = verify_design(design_or_path, tier=tier)
+    return {
+        "ok": rep.ok,
+        "n_errors": len(rep.errors),
+        "n_warnings": len(rep.warnings),
+        "codes": sorted(rep.codes()),
+        "diagnostics": [d.to_dict() for d in rep.diagnostics],
+        "pass_wall_s": {
+            k: v for k, v in rep.pass_wall_s.items() if isinstance(v, float)
+        },
+    }
+
+
+def _committed_artifacts() -> list:
+    """Committed da4ml-design artifact dirs (manifest.json anywhere in
+    the tree outside build/venv dirs)."""
+    found = []
+    for mf in _REPO_ROOT.rglob("manifest.json"):
+        if any(part.startswith(".") or part in ("build", "node_modules")
+               for part in mf.relative_to(_REPO_ROOT).parts):
+            continue
+        try:
+            if json.loads(mf.read_text()).get("format") == "da4ml-design":
+                found.append(mf.parent)
+        except (OSError, ValueError):
+            continue
+    return sorted(found)
+
+
+def main(json_path=None) -> dict:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.flow import CompileConfig, SolverConfig
+    from repro.nn import QDense, QuantConfig, compile_model, init_params
+    from repro.runtime import save_design
+
+    designs = {}
+    keep_one = None
+    for name, model, in_shape, in_quant, cfg in _corpus():
+        params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
+        t0 = time.perf_counter()
+        design = compile_model(model, params, in_shape, in_quant, config=cfg)
+        compile_s = time.perf_counter() - t0
+        entry = _verify_one(design, tier="strict")
+        entry["compile_s"] = compile_s
+        designs[name] = entry
+        if keep_one is None:
+            keep_one = design
+        print(f"lint,{name},{'OK' if entry['ok'] else 'FAIL'},"
+              f"{entry['n_errors']}e/{entry['n_warnings']}w", flush=True)
+
+    artifacts = {}
+    with tempfile.TemporaryDirectory() as td:
+        path = save_design(keep_one, Path(td) / "roundtrip")
+        artifacts["roundtrip"] = _verify_one(path, tier="strict")
+    for path in _committed_artifacts():
+        artifacts[str(path.relative_to(_REPO_ROOT))] = _verify_one(
+            path, tier="strict"
+        )
+    for name, entry in artifacts.items():
+        print(f"lint,artifact:{name},{'OK' if entry['ok'] else 'FAIL'},"
+              f"{entry['n_errors']}e/{entry['n_warnings']}w", flush=True)
+
+    # -- verify-overhead leg: cheap tier on a 64x64 compile ------------
+    wq = QuantConfig(6, 2, signed=True)
+    model = (QDense(64, wq),)
+    params, _ = init_params(jax.random.PRNGKey(1), model, (64,))
+    cfg = CompileConfig(solver=SolverConfig(dc=2), verify="cheap")
+    t0 = time.perf_counter()
+    design = compile_model(model, params, (64,), QuantConfig(8, 4, signed=True),
+                           config=cfg)
+    compile_s = time.perf_counter() - t0
+    vstats = design.solver_stats["verify"]
+    fraction = vstats["wall_s"] / compile_s if compile_s > 0 else 0.0
+    overhead = {
+        "compile_s": compile_s,
+        "verify_s": vstats["wall_s"],
+        "fraction": fraction,
+        "budget": OVERHEAD_BUDGET,
+        "ok": bool(vstats["ok"]) and fraction < OVERHEAD_BUDGET,
+    }
+    print(f"lint,overhead-64x64,{'OK' if overhead['ok'] else 'FAIL'},"
+          f"{fraction * 100:.2f}% of {compile_s:.2f}s", flush=True)
+
+    result = {"designs": designs, "artifacts": artifacts, "overhead": overhead}
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(result, fh, indent=2, sort_keys=True)
+    return result
+
+
+def passed(result: dict) -> bool:
+    ok = all(e["ok"] for e in result["designs"].values())
+    ok = ok and all(e["ok"] for e in result["artifacts"].values())
+    return ok and result["overhead"]["ok"]
+
+
+if __name__ == "__main__":
+    json_path = None
+    if "--json" in sys.argv:
+        json_path = sys.argv[sys.argv.index("--json") + 1]
+    sys.exit(0 if passed(main(json_path=json_path)) else 1)

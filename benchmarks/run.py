@@ -8,6 +8,7 @@
     serve_load              artifact round-trip + microbatched serve load
     rtl_cosim               RTL co-simulation gate (three-way bit-exact)
     obs_trace               telemetry layer gate (trace/metrics/flight)
+    lint_designs            static design-verifier gate (repro.analysis)
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
@@ -57,6 +58,7 @@ def main() -> None:
         "serve": "serve_load",
         "rtl": "rtl_cosim",
         "obs": "obs_trace",
+        "lint": "lint_designs",
         "lm": "lm_step_bench",
     }
     failed = False
@@ -65,7 +67,7 @@ def main() -> None:
             continue
         mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        if name in ("smoke", "serve", "rtl", "obs"):
+        if name in ("smoke", "serve", "rtl", "obs", "lint"):
             # gated benches: JSON artifact + exit-1 on budget/exactness
             # failure.  --json targets the explicitly selected bench
             # (or smoke, the historical default, when running all).

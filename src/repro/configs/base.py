@@ -11,7 +11,6 @@ instead of O(n_layers) while supporting heterogeneous stacks (Jamba's
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Optional
 
 ATTN, SSM = "attn", "ssm"
 MLP, MOE = "mlp", "moe"
@@ -82,7 +81,7 @@ class ArchConfig:
     def d_inner(self) -> int:
         return self.ssm_expand * self.d_model
 
-    def layer_pattern(self) -> tuple[list[tuple[str, Optional[str]]], int]:
+    def layer_pattern(self) -> tuple[list[tuple[str, str | None]], int]:
         """Returns (one period of (mixer, ffn) entries, n_periods)."""
         if self.family == "ssm":
             return [(SSM, None)], self.n_layers
@@ -188,8 +187,8 @@ class RunConfig:
     warmup_steps: int = 100
     weight_decay: float = 0.1
     grad_clip: float = 1.0
-    master_dtype: Optional[str] = "float32"  # None: bf16 params are master
-    state_dtype: Optional[str] = None  # 'int8' enables 8-bit Adam states
+    master_dtype: str | None = "float32"  # None: bf16 params are master
+    state_dtype: str | None = None  # 'int8' enables 8-bit Adam states
     microbatch: int = 1  # gradient-accumulation chunks
     fsdp_over_pod: bool = False  # shard params across pods too (1T-scale)
     seq_shard: bool = False  # sequence parallelism for long-context

@@ -27,7 +27,7 @@ import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -120,7 +120,7 @@ class SolutionCache:
     """In-memory LRU of solved CMVM programs, with optional disk backing."""
 
     max_items: int = 256
-    disk_dir: Optional[str] = None
+    disk_dir: str | None = None
     stats: CacheStats = field(default_factory=CacheStats)
 
     def __post_init__(self) -> None:

@@ -32,7 +32,7 @@ import shutil
 import subprocess
 import tempfile
 from pathlib import Path
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -96,7 +96,7 @@ def cosim_program(
     prog: DAISProgram,
     *,
     module_name: str = "cmvm",
-    max_delay_per_stage: Optional[int] = 3,
+    max_delay_per_stage: int | None = 3,
     n_vectors: int = 64,
     seed: int = 0,
     jit: str = "auto",
@@ -164,12 +164,12 @@ def cosim_program(
 def cosim_case(
     m: np.ndarray,
     *,
-    name: Optional[str] = None,
+    name: str | None = None,
     strategy: str = "da",
     engine: str = "batch",
     dc: int = -1,
-    max_delay_per_stage: Optional[int] = 3,
-    qint_in: Optional[Sequence[QInterval]] = None,
+    max_delay_per_stage: int | None = 3,
+    qint_in: Sequence[QInterval] | None = None,
     n_vectors: int = 64,
     seed: int = 0,
     jit: str = "auto",
@@ -284,7 +284,7 @@ def default_grid(seed: int = 0, n_vectors: int = 64) -> list[dict]:
 
 
 def cosim_grid(
-    cases: Optional[list[dict]] = None,
+    cases: list[dict] | None = None,
     *,
     jit: str = "auto",
     external: str = "skip",
@@ -327,7 +327,7 @@ def cosim_grid(
 # ----------------------------------------------------------------------
 # External reference simulators (Verilator / Icarus Verilog)
 # ----------------------------------------------------------------------
-def external_tool() -> Optional[str]:
+def external_tool() -> str | None:
     """Which external simulator is available: 'verilator', 'iverilog', None."""
     if shutil.which("verilator"):
         return "verilator"
@@ -385,7 +385,7 @@ def run_external(
     want: np.ndarray,
     latency: int,
     mode: str = "auto",
-    tool: Optional[str] = None,
+    tool: str | None = None,
 ) -> dict:
     """Replay ``x`` through a real simulator and compare against ``want``.
 

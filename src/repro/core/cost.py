@@ -17,7 +17,7 @@ Delay is modelled as adder depth (every adder = 1 unit, routing dominates
 from __future__ import annotations
 
 import heapq
-from typing import Iterable
+from collections.abc import Iterable
 
 import numpy as np
 

@@ -102,7 +102,6 @@ import heapq
 import threading
 import weakref
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 
@@ -311,9 +310,9 @@ class CSEArena:
 
     def __init__(self) -> None:
         self.scratch: dict[str, np.ndarray] = {}
-        self.tab_keys: Optional[np.ndarray] = None
-        self.tab_vals: Optional[np.ndarray] = None
-        self.tab_dorm: Optional[np.ndarray] = None
+        self.tab_keys: np.ndarray | None = None
+        self.tab_vals: np.ndarray | None = None
+        self.tab_dorm: np.ndarray | None = None
         self.col_bufs: dict[str, np.ndarray] = {}
         self.col_cap = 0
         self.col_top = 0
@@ -322,7 +321,7 @@ class CSEArena:
         self.busy = False
         self._col_demand = 0
         self._col_demand_hw = 0
-        self._owner: Optional[weakref.ref] = None
+        self._owner: weakref.ref | None = None
 
     # -- lifecycle -----------------------------------------------------
     def acquire(self, owner=None) -> bool:
@@ -767,14 +766,14 @@ class CSE:
         self,
         prog: DAISProgram,
         coeff_cols: list[dict[int, int]],
-        budgets: Optional[list[Optional[int]]] = None,
+        budgets: list[int | None] | None = None,
         weighted: bool = True,
         assembly_dedup: bool = True,
         depth_weight: float = 0.0,
         *,
         engine: str = "batch",
         build_counts: bool = True,
-        arena: Optional[CSEArena] = None,
+        arena: CSEArena | None = None,
     ) -> None:
         if engine not in ("heap", "batch", "arena"):
             raise ValueError(f"unknown CSE engine {engine!r}")
@@ -787,7 +786,7 @@ class CSE:
         # for this run; released at the end of run().  A busy arena —
         # another live arena CSE on this thread — falls back to a fresh
         # private workspace so correctness never depends on reuse.
-        self.arena: Optional[CSEArena] = None
+        self.arena: CSEArena | None = None
         self._arena_owned = False
         alloc = None
         if engine == "arena":
@@ -862,7 +861,7 @@ class CSE:
             self._apri = np.empty(0, dtype=np.float64)
             self._awt = np.empty(0, dtype=np.float64)  # static per-key weights
             self._agen = np.empty(0, dtype=np.int64)
-        self._rest: Optional[np.ndarray] = None
+        self._rest: np.ndarray | None = None
         self._rest_bound = -np.inf
 
         # Per-program-row metadata mirrors (lsb, msb, depth, is_zero) for
@@ -1194,7 +1193,7 @@ class CSE:
             return self.counts.is_dormant(key)
         return key in self._dormant
 
-    def _dormant_mask_of(self, keys: np.ndarray) -> Optional[np.ndarray]:
+    def _dormant_mask_of(self, keys: np.ndarray) -> np.ndarray | None:
         """Boolean dormancy mask for an array of keys (None = none are)."""
         if not self._any_dormant:
             return None
@@ -1326,7 +1325,7 @@ class CSE:
     # ------------------------------------------------------------------
     # Main loop
     # ------------------------------------------------------------------
-    def run(self) -> list[Optional[Term]]:
+    def run(self) -> list[Term | None]:
         try:
             with trace.span("cse.select", engine=self.engine):
                 if self.engine == "heap":
@@ -1731,8 +1730,8 @@ class CSE:
             self._combine_cache[ck] = res
         return res
 
-    def _assemble(self) -> list[Optional[Term]]:
-        outputs: list[Optional[Term]] = []
+    def _assemble(self) -> list[Term | None]:
+        outputs: list[Term | None] = []
         for store in self.cols:
             if not len(store):
                 outputs.append(None)

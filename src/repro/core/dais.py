@@ -20,7 +20,6 @@ delay-constraint machinery.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 
@@ -83,7 +82,7 @@ class DAISProgram:
     rows: list[Row] = field(default_factory=list)
     n_inputs: int = 0
     # One entry per output; None encodes the constant 0 output.
-    outputs: list[Optional[Term]] = field(default_factory=list)
+    outputs: list[Term | None] = field(default_factory=list)
 
     # ------------------------------------------------------------------
     # Construction

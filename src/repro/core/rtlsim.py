@@ -51,7 +51,6 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Optional, Union
 
 import numpy as np
 
@@ -105,7 +104,7 @@ class RTLModule:
     """Parsed netlist of one module."""
 
     name: str
-    clock: Optional[str]
+    clock: str | None
     signals: dict[str, Signal]
     inputs: list[str]  # data inputs, clock excluded, declaration order
     outputs: list[str]
@@ -113,7 +112,7 @@ class RTLModule:
     clocked: list[Assign]  # non-blocking assignments in the always block
     # filled by _analyze():
     comb_order: list[Assign] = field(default_factory=list)
-    latency_of: dict[str, Optional[int]] = field(default_factory=dict)
+    latency_of: dict[str, int | None] = field(default_factory=dict)
 
     @property
     def latency_cycles(self) -> int:
@@ -177,7 +176,7 @@ class _ExprParser:
         self.i = 0
         self.context = context
 
-    def peek(self) -> Optional[str]:
+    def peek(self) -> str | None:
         return self.toks[self.i] if self.i < len(self.toks) else None
 
     def next(self) -> str:
@@ -264,7 +263,7 @@ def parse_verilog(src: str) -> RTLModule:
     signals: dict[str, Signal] = {}
     inputs: list[str] = []
     outputs: list[str] = []
-    clock: Optional[str] = None
+    clock: str | None = None
 
     for raw in portlist.split(","):
         decl = " ".join(raw.split())
@@ -423,14 +422,14 @@ def _analyze(mod: RTLModule) -> None:
     # combinational (or an input/reg), so one pass over `order` followed
     # by rounds of reg relaxation terminates: reg depths only ever depend
     # on values produced strictly earlier in clock time.
-    depth: dict[str, Optional[tuple[int, int]]] = {
+    depth: dict[str, tuple[int, int] | None] = {
         nm: (0, 0) for nm in sigs if sigs[nm].kind == "input"
     }
     for nm in sigs:
         if sigs[nm].kind == "reg" and nm not in reg_driver:
             depth[nm] = None  # free-running reg; stays at reset value
 
-    def expr_depth(expr: Expr) -> Optional[tuple[int, int]]:
+    def expr_depth(expr: Expr) -> tuple[int, int] | None:
         # callers guarantee every ref is already resolved in `depth`
         ds = [d for d in (depth[r] for r in _refs(expr)) if d is not None]
         if not ds:
@@ -465,7 +464,7 @@ def _analyze(mod: RTLModule) -> None:
             f"register feedback loop: pipeline depth does not settle for {unresolved}"
         )
 
-    lat: dict[str, Optional[int]] = {}
+    lat: dict[str, int | None] = {}
     for nm in sigs:
         d = depth.get(nm)
         if d is not None and d[0] != d[1]:
@@ -588,7 +587,7 @@ class RTLSimulator:
     clocked in lockstep.  Registers reset to 0.
     """
 
-    def __init__(self, module: Union[RTLModule, str]):
+    def __init__(self, module: RTLModule | str):
         if isinstance(module, str):
             module = parse_verilog(module)
         self.module = module

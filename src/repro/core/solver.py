@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -43,7 +43,7 @@ class Solution:
     # packed ``DAISProgram.to_arrays`` dict when one already exists (set
     # by the SolutionCache on hit AND on put) — consumers treat it as
     # read-only and skip re-packing the program (see compile_model)
-    program_arrays: Optional[dict] = field(default=None, repr=False)
+    program_arrays: dict | None = field(default=None, repr=False)
 
     @property
     def n_adders(self) -> int:
@@ -92,7 +92,7 @@ def _integerize(m: np.ndarray, max_frac_bits: int = 32) -> tuple[np.ndarray, int
 
 def _budgets(
     m: np.ndarray, in_depths: Sequence[int], dc: int
-) -> tuple[list[Optional[int]], list[int]]:
+) -> tuple[list[int | None], list[int]]:
     """Per-output depth budgets: minimal achievable depth + dc."""
     if dc < 0:
         # unconstrained: no caller consumes the per-output minima, so
@@ -121,18 +121,18 @@ _LEGACY_SOLVER_KWARGS = {
 
 def solve_cmvm(
     m: np.ndarray,
-    qint_in: Optional[Sequence[QInterval]] = None,
-    depth_in: Optional[Sequence[int]] = None,
+    qint_in: Sequence[QInterval] | None = None,
+    depth_in: Sequence[int] | None = None,
     dc=UNSET,
     decompose_stage=UNSET,
     weighted=UNSET,
     assembly_dedup=UNSET,
     depth_weight=UNSET,
     engine=UNSET,
-    program: Optional[DAISProgram] = None,
-    input_rows: Optional[Sequence[int]] = None,
-    cache: Optional[SolutionCache] = None,
-    config: Optional[SolverConfig] = None,
+    program: DAISProgram | None = None,
+    input_rows: Sequence[int] | None = None,
+    cache: SolutionCache | None = None,
+    config: SolverConfig | None = None,
 ) -> Solution:
     """Optimize ``y = x @ m`` into an adder graph.
 
@@ -183,12 +183,12 @@ def solve_cmvm(
 
 def _solve_cmvm(
     m: np.ndarray,
-    qint_in: Optional[Sequence[QInterval]],
-    depth_in: Optional[Sequence[int]],
+    qint_in: Sequence[QInterval] | None,
+    depth_in: Sequence[int] | None,
     cfg: SolverConfig,
-    program: Optional[DAISProgram] = None,
-    input_rows: Optional[Sequence[int]] = None,
-    cache: Optional[SolutionCache] = None,
+    program: DAISProgram | None = None,
+    input_rows: Sequence[int] | None = None,
+    cache: SolutionCache | None = None,
 ) -> Solution:
     """Config-consuming solver core (all public paths delegate here).
 
@@ -212,12 +212,12 @@ def _solve_cmvm(
 
 def _solve_cmvm_impl(
     m: np.ndarray,
-    qint_in: Optional[Sequence[QInterval]],
-    depth_in: Optional[Sequence[int]],
+    qint_in: Sequence[QInterval] | None,
+    depth_in: Sequence[int] | None,
     cfg: SolverConfig,
-    program: Optional[DAISProgram] = None,
-    input_rows: Optional[Sequence[int]] = None,
-    cache: Optional[SolutionCache] = None,
+    program: DAISProgram | None = None,
+    input_rows: Sequence[int] | None = None,
+    cache: SolutionCache | None = None,
 ) -> Solution:
     if not isinstance(cfg, SolverConfig):
         from ..flow.config import ConfigError
@@ -275,7 +275,7 @@ def _solve_cmvm_impl(
         # budget for M1 column e: tightest consumer budget minus the depth
         # reserve needed to merge that consumer's path terms.
         k = dec.m1.shape[1]
-        m1_budgets: list[Optional[int]] = [None] * k
+        m1_budgets: list[int | None] = [None] * k
         if dc >= 0:
             for e in range(k):
                 consumers = np.nonzero(dec.m2[e, :])[0]
@@ -374,7 +374,7 @@ def config_solve_key(
 
 def default_solve_key(
     m_int, qint_in, depth_in, dc: int, kind: str = "da",
-    engine: Optional[str] = None,
+    engine: str | None = None,
 ) -> str:
     """Deprecated shim: cache key for a solve with every option at its
     :class:`SolverConfig` default (``engine`` optionally overridden).
@@ -407,8 +407,8 @@ def solve_task(payload) -> "Solution":
 
 def naive_adder_tree(
     m: np.ndarray,
-    qint_in: Optional[Sequence[QInterval]] = None,
-    depth_in: Optional[Sequence[int]] = None,
+    qint_in: Sequence[QInterval] | None = None,
+    depth_in: Sequence[int] | None = None,
 ) -> Solution:
     """Baseline: per-output CSD adder tree without any sharing.
 

@@ -9,7 +9,6 @@ combinational when ``max_delay_per_stage`` is None.
 
 from __future__ import annotations
 
-from typing import Optional
 
 from .dais import KIND_ADD, KIND_INPUT, KIND_NEG, DAISProgram
 from .pipelining import pipeline
@@ -40,7 +39,7 @@ def _w(prog: DAISProgram, i: int) -> int:
 def emit_verilog(
     prog: DAISProgram,
     module_name: str = "cmvm",
-    max_delay_per_stage: Optional[int] = 5,
+    max_delay_per_stage: int | None = 5,
 ) -> str:
     """Emit a Verilog-2001 module computing the program's outputs."""
     pipelined = max_delay_per_stage is not None

@@ -19,7 +19,6 @@ single-process CPU harness the full batch is returned directly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 
@@ -31,7 +30,7 @@ class DataConfig:
     global_batch: int
     seed: int = 0
     source: str = "synthetic"  # synthetic | corpus
-    corpus_path: Optional[str] = None
+    corpus_path: str | None = None
     markov_order: int = 2
 
 

@@ -20,7 +20,6 @@ from __future__ import annotations
 import contextlib
 import threading
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 import numpy as np
@@ -35,7 +34,7 @@ class MeshRules:
     fsdp: bool = True  # False: replicate params over data (small-model serving)
     fallbacks: list = field(default_factory=list)
 
-    def axes_for(self, token: Optional[str]):
+    def axes_for(self, token: str | None):
         names = self.mesh.axis_names
         if token is None:
             return ()
@@ -93,12 +92,12 @@ class MeshRules:
 _local = threading.local()
 
 
-def current_rules() -> Optional[MeshRules]:
+def current_rules() -> MeshRules | None:
     return getattr(_local, "rules", None)
 
 
 @contextlib.contextmanager
-def use_rules(rules: Optional[MeshRules]):
+def use_rules(rules: MeshRules | None):
     prev = current_rules()
     _local.rules = rules
     try:

@@ -32,7 +32,8 @@ import hashlib
 import json
 import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, ClassVar, Optional
+from collections.abc import Callable
+from typing import Any, ClassVar
 
 _DIGEST_VERSION = "da4ml-flow-config-v1"
 
@@ -42,7 +43,7 @@ class _Unset:
     an explicit default).  Singleton; reprs as ``UNSET`` so shimmed
     signatures stay readable (and API-snapshot stable)."""
 
-    _instance: Optional["_Unset"] = None
+    _instance: "_Unset" | None = None
 
     def __new__(cls) -> "_Unset":
         if cls._instance is None:
@@ -62,7 +63,7 @@ class ConfigError(ValueError):
 
 def resolve_legacy(
     api: str,
-    config: Optional["_ConfigBase"],
+    config: "_ConfigBase" | None,
     legacy: dict,
     config_cls: type,
     build: Callable[[dict], "_ConfigBase"],
@@ -215,18 +216,25 @@ class CompileConfig(_ConfigBase):
     cache                optional live ``SolutionCache`` handle; runtime
                          only — excluded from to_dict/digest.
     solver               nested :class:`SolverConfig` (default dc=2).
+    verify               static-verification tier run on every compiled
+                         design ("off", "cheap", "strict"; default
+                         "cheap" — see repro.analysis).  Error-severity
+                         findings fail the compile loudly.  Never changes
+                         the produced bits, so it is excluded from the
+                         config digest (like ``jobs``).
     """
 
     _RUNTIME_ONLY: ClassVar[tuple] = ("cache",)
-    _DIGEST_EXCLUDE: ClassVar[tuple] = ("jobs",)
+    _DIGEST_EXCLUDE: ClassVar[tuple] = ("jobs", "verify")
     _NESTED: ClassVar[dict] = {"solver": SolverConfig}
 
     strategy: str = "da"
     max_delay_per_stage: int = 5
     use_pallas: bool = False
-    jobs: Optional[int] = None
-    cache: Optional[Any] = None
+    jobs: int | None = None
+    cache: Any | None = None
     solver: SolverConfig = field(default_factory=_default_compile_solver)
+    verify: str = "cheap"
 
     def __post_init__(self) -> None:
         self._require(
@@ -248,6 +256,11 @@ class CompileConfig(_ConfigBase):
         self._require(
             self.cache is None or (hasattr(self.cache, "get") and hasattr(self.cache, "put")),
             "cache must be None or a SolutionCache-like object with get/put",
+        )
+        self._require(
+            self.verify in ("off", "cheap", "strict"),
+            f"unknown verify tier {self.verify!r} "
+            "(expected 'off', 'cheap', or 'strict')",
         )
 
 
@@ -272,7 +285,7 @@ class ServeConfig(_ConfigBase):
     max_wait_us: float = 200.0
     queue_depth: int = 8192
     backpressure: str = "block"
-    buckets: Optional[tuple] = None
+    buckets: tuple | None = None
     shards: int = 1
 
     def __post_init__(self) -> None:

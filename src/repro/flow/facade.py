@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import threading
 from pathlib import Path
-from typing import Optional, Union
 
 import numpy as np
 
@@ -43,7 +42,7 @@ class Flow:
         params,
         in_shape,
         in_quant,
-        config: Optional[CompileConfig] = None,
+        config: CompileConfig | None = None,
     ) -> CompiledDesign:
         """Compile a quantized model into a bit-exact integer design.
 
@@ -56,14 +55,34 @@ class Flow:
         )
 
     @staticmethod
-    def load(path: Union[str, Path]) -> CompiledDesign:
-        """Load a ``design.save(path)`` artifact (zero solver calls)."""
-        return CompiledDesign.load(path)
+    def load(path: str | Path, verify: str = "off") -> CompiledDesign:
+        """Load a ``design.save(path)`` artifact (zero solver calls).
+
+        ``verify`` runs the static verifier on the loaded design
+        ("off" default, "cheap", "strict"); error-severity findings
+        raise :class:`repro.analysis.DesignVerificationError`.
+        """
+        from ..runtime.artifact import load_design
+
+        return load_design(path, verify=verify)
+
+    @staticmethod
+    def verify(design_or_path, tier: str = "strict"):
+        """Statically verify a compiled design or artifact directory.
+
+        Returns a :class:`repro.analysis.DiagnosticReport` (never raises
+        on findings; check ``report.ok`` / ``report.errors``).  Artifact
+        paths additionally run the artifact auditor before the program
+        and step passes.
+        """
+        from ..analysis import verify_design
+
+        return verify_design(design_or_path, tier=tier)
 
     @staticmethod
     def serve(
-        config: Optional[ServeConfig] = None,
-        models: Optional[dict] = None,
+        config: ServeConfig | None = None,
+        models: dict | None = None,
         warmup: bool = False,
     ) -> "Deployment":
         """Create a :class:`Deployment`; optionally register ``models``
@@ -91,8 +110,8 @@ class Deployment:
 
     def __init__(
         self,
-        config: Optional[ServeConfig] = None,
-        engine: Optional[ServeEngine] = None,
+        config: ServeConfig | None = None,
+        engine: ServeEngine | None = None,
         drain_timeout: float = 30.0,
     ):
         if engine is not None and config is not None:
@@ -104,7 +123,7 @@ class Deployment:
         self.drain_timeout = drain_timeout
         self._lock = threading.Lock()
         # name -> {version: engine key}; None marks a registration in flight
-        self._versions: dict[str, dict[int, Optional[str]]] = {}
+        self._versions: dict[str, dict[int, str | None]] = {}
         self._active: dict[str, int] = {}
 
     # -- registry ------------------------------------------------------
@@ -115,8 +134,8 @@ class Deployment:
     def register(
         self,
         name: str,
-        design: Union[CompiledDesign, str, Path],
-        version: Optional[int] = None,
+        design: CompiledDesign | str | Path,
+        version: int | None = None,
         warmup: bool = False,
         drain: bool = True,
     ) -> int:
@@ -175,7 +194,7 @@ class Deployment:
                 raise KeyError(f"model {name!r} has no live version {version}")
             self._active[name] = version
 
-    def unregister(self, name: str, version: Optional[int] = None) -> None:
+    def unregister(self, name: str, version: int | None = None) -> None:
         """Drop one version, or the whole model (all versions + alias)."""
         if version is not None:
             with self._lock:
@@ -242,13 +261,13 @@ class Deployment:
     def submit_batch(self, name: str, xs) -> list:
         return self._on_active(name, lambda key: self.engine.submit_batch(key, xs))
 
-    def infer(self, name: str, x: np.ndarray, timeout: Optional[float] = 30.0):
+    def infer(self, name: str, x: np.ndarray, timeout: float | None = 30.0):
         return self._on_active(name, lambda key: self.engine.infer(key, x, timeout))
 
     def warmup(self, name: str) -> float:
         return self._on_active(name, self.engine.warmup)
 
-    def stats(self, name: Optional[str] = None) -> dict:
+    def stats(self, name: str | None = None) -> dict:
         """Per-model stats of the *active* version (annotated with the
         version number), or all models when ``name`` is None."""
         if name is not None:

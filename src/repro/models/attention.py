@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +17,9 @@ def attention_block(
     p: dict,
     x: jnp.ndarray,  # [B, S, D]
     positions: jnp.ndarray,  # [B, S] or [S]
-    cache: Optional[dict] = None,  # {"k","v": [B, S_max, Hkv, hd], "pos": scalar}
+    cache: dict | None = None,  # {"k","v": [B, S_max, Hkv, hd], "pos": scalar}
     causal: bool = True,
-    kv_source: Optional[jnp.ndarray] = None,  # cross-attention keys/values
+    kv_source: jnp.ndarray | None = None,  # cross-attention keys/values
 ):
     """Returns (out [B, S, D], new_cache)."""
     b, s, _ = x.shape

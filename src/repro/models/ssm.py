@@ -18,7 +18,6 @@ cache.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +63,7 @@ def mamba_block(
     cfg,
     p: dict,
     x: jnp.ndarray,  # [B, S, D]
-    cache: Optional[dict] = None,
+    cache: dict | None = None,
     # cache: {"conv": [B, k-1, d_inner], "h": [B, d_inner, state]} —
     # this layer's slice (scan xs); updates return via scan ys
 ):

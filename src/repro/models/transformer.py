@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ class PSpec:
     shape: tuple
     axes: tuple  # logical sharding tokens per dim
     init: str = "normal"  # normal | zeros | ones
-    fan_in_axis: Optional[int] = None  # for 1/sqrt(fan_in) scaling
+    fan_in_axis: int | None = None  # for 1/sqrt(fan_in) scaling
 
 
 # ----------------------------------------------------------------------
@@ -92,7 +91,7 @@ def _moe_specs(cfg: ArchConfig, periods: int) -> dict:
     }
 
 
-def _block_specs(cfg: ArchConfig, mixer: str, ffn: Optional[str], periods: int, cross: bool) -> dict:
+def _block_specs(cfg: ArchConfig, mixer: str, ffn: str | None, periods: int, cross: bool) -> dict:
     d = cfg.d_model
     p = (periods,)
     s: dict = {"norm1": PSpec(p + (d,), (None, None), "ones")}

@@ -24,7 +24,7 @@ import concurrent.futures
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax.numpy as jnp
 import numpy as np
@@ -88,14 +88,14 @@ class StepSpec:
     params: dict = field(default_factory=dict)
     arrays: dict = field(default_factory=dict)
     table: int = -1
-    body: Optional[list["StepSpec"]] = None
+    body: list["StepSpec"] | None = None
 
 
 @dataclass
 class CompiledDesign:
     steps: list[Callable] = field(default_factory=list)
     reports: list[LayerReport] = field(default_factory=list)
-    in_quant: Optional[QuantConfig] = None
+    in_quant: QuantConfig | None = None
     in_shape: tuple = ()
     out_shape: tuple = ()
     out_qints: list[QInterval] = field(default_factory=list)
@@ -114,7 +114,7 @@ class CompiledDesign:
     # the CompileConfig that produced this design (embedded in saved
     # artifact manifests; None for designs loaded from pre-config
     # artifacts or built by hand)
-    config: Optional[CompileConfig] = None
+    config: CompileConfig | None = None
 
     # ------------------------------------------------------------------
     def save(self, path):
@@ -126,12 +126,13 @@ class CompiledDesign:
         return save_design(self, path)
 
     @classmethod
-    def load(cls, path) -> "CompiledDesign":
+    def load(cls, path, verify: str = "off") -> "CompiledDesign":
         """Rebuild a design from a ``save_design`` artifact — millisecond
-        cold start, zero CMVM solves, bit-identical execution."""
+        cold start, zero CMVM solves, bit-identical execution.  ``verify``
+        optionally runs the static verifier on the rebuilt design."""
         from ..runtime.artifact import load_design  # lazy: runtime imports nn
 
-        return load_design(path)
+        return load_design(path, verify=verify)
 
     @property
     def total_adders(self) -> int:
@@ -261,7 +262,9 @@ def _build_step(spec: StepSpec, tables: list, use_pallas: bool) -> Callable:
 
         return step
     if kind == "transpose":
-        def step(v, shape=tuple(p["shape"]), perm=tuple(p["perm"])):
+        _shape, _perm = tuple(p["shape"]), tuple(p["perm"])
+
+        def step(v, shape=_shape, perm=_perm):
             n = v.shape[0]
             return v.reshape(n, *shape).transpose(0, *[q + 1 for q in perm]).reshape(n, -1)
 
@@ -330,8 +333,13 @@ def _exps(qints: list[QInterval], fallback: int = 0) -> np.ndarray:
 def _requant_spec(qints: list[QInterval], cfg: QuantConfig) -> StepSpec:
     t = cfg.qint
     d = _exps(qints, fallback=t.exp) - t.exp
+    # "exp" (the target grid exponent) is not read by the executor; it is
+    # the metadata that lets the static verifier (repro.analysis) replay
+    # this requant's interval transfer exactly
     return StepSpec(
-        "requant", params={"lo": int(t.lo), "hi": int(t.hi)}, arrays={"d": d}
+        "requant",
+        params={"lo": int(t.lo), "hi": int(t.hi), "exp": int(t.exp)},
+        arrays={"d": d},
     )
 
 
@@ -383,7 +391,7 @@ class _SolveSlot:
         self.strategy = strategy
         self.solver_cfg: SolverConfig = solver_cfg
         self.key = None
-        self.solution: Optional[Solution] = None
+        self.solution: Solution | None = None
         self.tables = None
         self.idx = idx  # position in ctx.slots == design.tables index
 
@@ -423,9 +431,9 @@ def _slot_key(slot: _SolveSlot) -> str:
 
 def _solve_slots(
     slots: list[_SolveSlot],
-    jobs: Optional[int],
-    cache: Optional[SolutionCache],
-    slot_names: Optional[dict[int, list[str]]] = None,
+    jobs: int | None,
+    cache: SolutionCache | None,
+    slot_names: dict[int, list[str]] | None = None,
 ) -> dict:
     """Resolve the deferred CMVM solves: cache first, then the remaining
     misses in a thread pool.
@@ -466,7 +474,7 @@ def _solve_slots(
                 continue
         misses.append(slot)
     n_pool = 0
-    fallback: Optional[str] = None
+    fallback: str | None = None
     if misses:
         # (payload, label) units: the label names the solve's trace span
         # and keys the per-slot wall time (satellite per-layer stats)
@@ -477,7 +485,7 @@ def _solve_slots(
             )
             for s in misses
         ]
-        results: Optional[list[tuple[Solution, float]]] = None
+        results: list[tuple[Solution, float]] | None = None
         jobs_eff = os.cpu_count() or 1 if jobs is None else jobs
         if jobs_eff == 1:
             fallback = "jobs=1"
@@ -585,7 +593,7 @@ def compile_model(
     jobs=UNSET,
     cache=UNSET,
     engine=UNSET,
-    config: Optional[CompileConfig] = None,
+    config: CompileConfig | None = None,
 ) -> CompiledDesign:
     """Compile a quantized Sequential into a bit-exact integer design.
 
@@ -720,7 +728,53 @@ def _compile_model(
     design.out_shape = shape
     design.out_qints = qints
     _stitch_span.__exit__(None, None, None)
+    if cfg.verify != "off":
+        _verify_design_gate(design, cfg, slot_names)
     return design
+
+
+def _verify_design_gate(design: CompiledDesign, cfg: CompileConfig, slot_names) -> None:
+    """Run the static verifier on a freshly compiled design.
+
+    Findings land in ``solver_stats["verify"]`` (overall + per-layer
+    pass/fail and wall time, keyed by the same layer names as
+    ``per_layer`` solve stats); error-severity findings raise
+    ``repro.analysis.DesignVerificationError`` — a design the verifier
+    rejects must not be silently returned.
+    """
+    from ..analysis import DesignVerificationError, verify_design  # lazy: no cycle
+
+    t0 = time.perf_counter()
+    with trace.span("analysis.verify", tier=cfg.verify):
+        vrep = verify_design(
+            design, tier=cfg.verify, max_delay_per_stage=cfg.max_delay_per_stage
+        )
+    wall = time.perf_counter() - t0
+    by_prog = vrep.pass_wall_s.get("program_by_index", {})
+    per_layer = {}
+    for idx, names in slot_names.items():
+        n_err = sum(
+            1 for d in vrep.errors if d.loc.get("program") == idx
+        )
+        for nm in names:
+            per_layer[nm] = {
+                "ok": n_err == 0,
+                "n_errors": n_err,
+                "wall_s": by_prog.get(idx, 0.0),
+            }
+    design.solver_stats["verify"] = {
+        "tier": cfg.verify,
+        "ok": vrep.ok,
+        "n_errors": len(vrep.errors),
+        "n_warnings": len(vrep.warnings),
+        "wall_s": wall,
+        "pass_wall_s": {
+            k: v for k, v in vrep.pass_wall_s.items() if isinstance(v, float)
+        },
+        "per_layer": per_layer,
+    }
+    if not vrep.ok:
+        raise DesignVerificationError(vrep, context="compiled design")
 
 
 def _affine_out_qints(w_int: np.ndarray, qin: list[QInterval]) -> list[QInterval]:
@@ -733,7 +787,7 @@ def _affine_out_qints(w_int: np.ndarray, qin: list[QInterval]) -> list[QInterval
     than interval propagation through the adder tree)."""
     out: list[QInterval] = []
     for jcol in range(w_int.shape[1]):
-        q: Optional[QInterval] = None
+        q: QInterval | None = None
         col = w_int[:, jcol]
         for i in np.nonzero(col)[0]:
             term = qin[int(i)].scale(int(col[i]))
@@ -854,7 +908,14 @@ def _compile_dense_last(spec: QDense, p, shape, qints, ctx):
     qin = [_union_all(list(qarr[:, k])) for k in range(d_in)]
     b = np.asarray(p["b"]) if spec.use_bias else None
     (table, arrays), out_q = _cmvm("dense", np.asarray(p["w"]), b, spec.w_quant, qin, ctx)
-    s = StepSpec("dense", params={"d_in": d_in}, arrays=arrays, table=table)
+    # "wscale" (the weight grid exponent) is verifier metadata, like the
+    # requant "exp" param — the executor never reads it
+    s = StepSpec(
+        "dense",
+        params={"d_in": d_in, "wscale": int(spec.w_quant.scale_exp())},
+        arrays=arrays,
+        table=table,
+    )
     return s, shape[:-1] + (spec.units,), list(out_q) * lead
 
 
@@ -936,6 +997,7 @@ def _compile_conv(spec: QConv2D, p, shape, qints, ctx):
         params={
             "h": h, "w": w, "cin": cin, "kh": kh, "kw": kw,
             "sh": sh, "sw": sw, "oh": oh, "ow": ow,
+            "wscale": int(spec.w_quant.scale_exp()),
         },
         arrays=arrays,
         table=table,

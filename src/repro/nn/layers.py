@@ -11,7 +11,6 @@ within 1 ulp of the hardware semantics.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ from .quant import QuantConfig, bit_count_surrogate, fake_quant
 class QDense:
     units: int
     w_quant: QuantConfig = QuantConfig(8, 2)
-    out_quant: Optional[QuantConfig] = None  # activation re-quantization
+    out_quant: QuantConfig | None = None  # activation re-quantization
     use_bias: bool = True
 
 
@@ -39,7 +38,7 @@ class QDenseOnAxis:
     units: int
     axis: int
     w_quant: QuantConfig = QuantConfig(8, 2)
-    out_quant: Optional[QuantConfig] = None
+    out_quant: QuantConfig | None = None
     use_bias: bool = True
 
 
@@ -50,13 +49,13 @@ class QConv2D:
     strides: tuple[int, int] = (1, 1)
     padding: str = "VALID"
     w_quant: QuantConfig = QuantConfig(8, 2)
-    out_quant: Optional[QuantConfig] = None
+    out_quant: QuantConfig | None = None
     use_bias: bool = True
 
 
 @dataclass(frozen=True)
 class ReLU:
-    out_quant: Optional[QuantConfig] = None
+    out_quant: QuantConfig | None = None
 
 
 @dataclass(frozen=True)
@@ -83,9 +82,7 @@ class Residual:
     body: tuple = ()
 
 
-LayerSpec = Union[
-    QDense, QDenseOnAxis, QConv2D, ReLU, MaxPool2D, AvgPool2D, Flatten, Residual
-]
+LayerSpec = QDense | QDenseOnAxis | QConv2D | ReLU | MaxPool2D | AvgPool2D | Flatten | Residual
 Sequential = tuple  # tuple[LayerSpec, ...]
 
 
@@ -166,7 +163,7 @@ def apply_model(
     params: list,
     model: Sequential,
     x: jnp.ndarray,
-    in_quant: Optional[QuantConfig] = None,
+    in_quant: QuantConfig | None = None,
     collect_bits: bool = False,
 ):
     """Run the float/STE forward pass.

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Iterable, Optional, Sequence
+from collections.abc import Iterable, Sequence
 
 __all__ = ["STAGES", "FlightRecorder"]
 
@@ -74,7 +74,7 @@ class FlightRecorder:
             "stages_us": dict(zip(STAGES, stages)),
         }
 
-    def recent(self, n: Optional[int] = None) -> list[dict]:
+    def recent(self, n: int | None = None) -> list[dict]:
         """Most-recent retained records, newest last."""
         held = min(self._n, self.capacity)
         take = held if n is None else min(n, held)
@@ -96,7 +96,7 @@ class FlightRecorder:
         }
 
     @staticmethod
-    def merged(recorders: Iterable["FlightRecorder"], slow_k: Optional[int] = None) -> dict:
+    def merged(recorders: Iterable["FlightRecorder"], slow_k: int | None = None) -> dict:
         """Cross-shard snapshot: summed counts, overall slowest-K."""
         recs = list(recorders)
         k = slow_k if slow_k is not None else max((r.slow_k for r in recs), default=0)

@@ -23,7 +23,7 @@ import bisect
 import itertools
 import math
 import threading
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from collections.abc import Iterable, Sequence
 
 __all__ = [
     "DEFAULT_BUCKETS_US",
@@ -35,7 +35,7 @@ __all__ = [
 
 # 1µs .. 10s, roughly 1-2-5 per decade — wide enough for both solver
 # phases (ms..s) and serve stages (µs..ms)
-DEFAULT_BUCKETS_US: Tuple[float, ...] = (
+DEFAULT_BUCKETS_US: tuple[float, ...] = (
     1.0, 2.0, 5.0,
     10.0, 20.0, 50.0,
     100.0, 200.0, 500.0,
@@ -49,7 +49,7 @@ DEFAULT_BUCKETS_US: Tuple[float, ...] = (
 # shards; itertools.count() bumps under the GIL without a lock
 _GAUGE_SEQ = itertools.count()
 
-LabelsT = Tuple[Tuple[str, str], ...]
+LabelsT = tuple[tuple[str, str], ...]
 
 
 def _labels_key(labels: dict) -> LabelsT:
@@ -92,7 +92,7 @@ class Histogram:
 
     @staticmethod
     def merged(hists: Iterable["Histogram"]) -> "Histogram":
-        out: Optional[Histogram] = None
+        out: Histogram | None = None
         for h in hists:
             if out is None:
                 out = Histogram(h.bounds)
@@ -134,10 +134,10 @@ class _Shard:
     __slots__ = ("counters", "gauges", "hists")
 
     def __init__(self) -> None:
-        self.counters: Dict[Tuple[str, LabelsT], float] = {}
+        self.counters: dict[tuple[str, LabelsT], float] = {}
         # gauge value is (seq, value) so merge can pick the latest write
-        self.gauges: Dict[Tuple[str, LabelsT], Tuple[int, float]] = {}
-        self.hists: Dict[Tuple[str, LabelsT], Histogram] = {}
+        self.gauges: dict[tuple[str, LabelsT], tuple[int, float]] = {}
+        self.hists: dict[tuple[str, LabelsT], Histogram] = {}
 
 
 class MetricsRegistry:
@@ -177,12 +177,12 @@ class MetricsRegistry:
         h.observe(value)
 
     # -- read path -------------------------------------------------------
-    def _merged(self) -> Tuple[dict, dict, dict]:
+    def _merged(self) -> tuple[dict, dict, dict]:
         with self._lock:
             shards = list(self._shards)
-        counters: Dict[Tuple[str, LabelsT], float] = {}
-        gauges: Dict[Tuple[str, LabelsT], Tuple[int, float]] = {}
-        hists: Dict[Tuple[str, LabelsT], Histogram] = {}
+        counters: dict[tuple[str, LabelsT], float] = {}
+        gauges: dict[tuple[str, LabelsT], tuple[int, float]] = {}
+        hists: dict[tuple[str, LabelsT], Histogram] = {}
         for s in shards:
             for key, v in list(s.counters.items()):
                 counters[key] = counters.get(key, 0.0) + v
@@ -219,13 +219,13 @@ class MetricsRegistry:
         counters, gauges, hists = self._merged()
         families: list[tuple[str, str, list]] = []
         for kind, data in (("counter", counters), ("gauge", gauges)):
-            by_name: Dict[str, list] = {}
+            by_name: dict[str, list] = {}
             for (n, k), v in sorted(data.items()):
                 val = v[1] if kind == "gauge" else v
                 by_name.setdefault(n, []).append((k, val))
             for n, samples in by_name.items():
                 families.append((n, kind, samples))
-        hist_by_name: Dict[str, list] = {}
+        hist_by_name: dict[str, list] = {}
         for (n, k), h in sorted(hists.items()):
             hist_by_name.setdefault(n, []).append((k, h))
         lines: list[str] = []

@@ -28,7 +28,6 @@ import json
 import os
 import threading
 from collections import deque
-from typing import Optional
 
 __all__ = ["log_solve", "records", "reset", "set_path", "get_path"]
 
@@ -36,17 +35,17 @@ _RING_CAP = 4096
 
 _lock = threading.Lock()
 _ring: deque = deque(maxlen=_RING_CAP)
-_path: Optional[str] = os.environ.get("REPRO_SOLVE_LOG") or None
+_path: str | None = os.environ.get("REPRO_SOLVE_LOG") or None
 
 
-def set_path(path: Optional[str]) -> None:
+def set_path(path: str | None) -> None:
     """Set (or clear, with None) the JSONL sink for solve records."""
     global _path
     with _lock:
         _path = path
 
 
-def get_path() -> Optional[str]:
+def get_path() -> str | None:
     return _path
 
 

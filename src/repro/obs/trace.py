@@ -38,7 +38,8 @@ import json
 import os
 import threading
 import time
-from typing import Any, Optional
+from collections.abc import Iterator
+from typing import Any
 
 __all__ = [
     "enabled",
@@ -101,7 +102,7 @@ class _ThreadBuf:
         self.events[self.n % self.cap] = ev
         self.n += 1
 
-    def iter_events(self):
+    def iter_events(self) -> Iterator[tuple]:
         """Yield retained events oldest-first."""
         if self.n <= self.cap:
             for i in range(self.n):
@@ -151,7 +152,7 @@ class span:
 
     __slots__ = ("name", "args", "t0", "depth")
 
-    def __new__(cls, name: str, **attrs: Any):
+    def __new__(cls, name: str, **attrs: Any) -> "span | _NoopSpan":
         if not _enabled:
             return _NOOP
         self = object.__new__(cls)
@@ -204,7 +205,7 @@ def reset() -> None:
             b.events = [None] * b.cap
 
 
-def export(path: Optional[str] = None) -> dict:
+def export(path: str | None = None) -> dict:
     """Build (and optionally write) a Chrome trace-event JSON document.
 
     Merges every thread's ring into one ``{"traceEvents": [...]}`` doc
@@ -227,7 +228,7 @@ def export(path: Optional[str] = None) -> dict:
             }
         )
         n_dropped += b.n_dropped
-        for name, ts, dur, depth, args in b.iter_events():
+        for name, ts, dur, _depth, args in b.iter_events():
             ev = {
                 "name": name,
                 "cat": "repro",

@@ -14,7 +14,7 @@ Memory modes (RunConfig):
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +44,8 @@ def make_adamw(
     b2: float = 0.95,
     eps: float = 1e-8,
     weight_decay: float = 0.1,
-    master_dtype: Optional[str] = "float32",
-    state_dtype: Optional[str] = None,
+    master_dtype: str | None = "float32",
+    state_dtype: str | None = None,
 ):
     def init(params):
         zeros = jax.tree.map(

@@ -33,7 +33,6 @@ import json
 import time
 from dataclasses import asdict
 from pathlib import Path
-from typing import Union
 
 import numpy as np
 
@@ -81,7 +80,7 @@ def _sanitize(obj):
     return None
 
 
-def save_design(design: CompiledDesign, path: Union[str, Path]) -> Path:
+def save_design(design: CompiledDesign, path: str | Path) -> Path:
     """Persist a compiled design to ``path`` (a directory, created).
 
     Raises ``ValueError`` if any of the design's DAIS programs could not
@@ -165,13 +164,19 @@ def save_design(design: CompiledDesign, path: Union[str, Path]) -> Path:
     return path
 
 
-def load_design(path: Union[str, Path]) -> CompiledDesign:
+def load_design(path: str | Path, verify: str = "off") -> CompiledDesign:
     """Rebuild a compiled design from a ``save_design`` artifact.
 
     Cold-starts in milliseconds: no CMVM solves run; instruction tables
     are recompiled from the packed DAIS programs and the executable
     steps come from the shared ``build_steps`` builder, so the result is
     bit-identical to the design that was saved.
+
+    ``verify`` ("off" default / "cheap" / "strict") runs the static
+    verifier (:mod:`repro.analysis`) on the rebuilt design; error-
+    severity findings raise ``DesignVerificationError``.  Default off:
+    the digest check above already guards integrity, and artifact loads
+    sit on serving cold-start paths.
     """
     t0 = time.perf_counter()
     path = Path(path)
@@ -237,4 +242,19 @@ def load_design(path: Union[str, Path]) -> CompiledDesign:
         "load_s": time.perf_counter() - t0,
         "compile_solver_stats": manifest.get("solver_stats", {}),
     }
+    if verify != "off":
+        from ..analysis import DesignVerificationError, verify_design
+
+        vrep = verify_design(design, tier=verify)
+        design.solver_stats["verify"] = {
+            "tier": verify,
+            "ok": vrep.ok,
+            "n_errors": len(vrep.errors),
+            "n_warnings": len(vrep.warnings),
+            "pass_wall_s": {
+                k: v for k, v in vrep.pass_wall_s.items() if isinstance(v, float)
+            },
+        }
+        if not vrep.ok:
+            raise DesignVerificationError(vrep, context=f"artifact {path}")
     return design

@@ -48,7 +48,6 @@ import time
 from collections import deque
 from concurrent.futures import Future
 from pathlib import Path
-from typing import Optional, Union
 
 import jax
 import numpy as np
@@ -410,7 +409,7 @@ class _ModelRunner:
         max_batch: int,
         queue_depth: int,
         max_wait_us: float,
-        buckets: Optional[tuple[int, ...]],
+        buckets: tuple[int, ...] | None,
         shards: int = 1,
     ):
         self.model_name = name
@@ -548,7 +547,7 @@ class ServeEngine:
         max_wait_us=UNSET,
         buckets=UNSET,
         overflow=UNSET,
-        config: Optional[ServeConfig] = None,
+        config: ServeConfig | None = None,
     ):
         legacy = {
             name: val
@@ -578,7 +577,7 @@ class ServeEngine:
     def register(
         self,
         name: str,
-        design: Union[CompiledDesign, str, Path],
+        design: CompiledDesign | str | Path,
         warmup: bool = False,
     ) -> CompiledDesign:
         """Register a design (or load one from an artifact path)."""
@@ -675,14 +674,14 @@ class ServeEngine:
             xs, time.perf_counter(), block=self.overflow != "reject"
         )
 
-    def infer(self, name: str, x: np.ndarray, timeout: Optional[float] = 30.0):
+    def infer(self, name: str, x: np.ndarray, timeout: float | None = 30.0):
         """Synchronous single-sample convenience wrapper."""
         return self.submit(name, x).result(timeout)
 
     def warmup(self, name: str) -> float:
         return self._runner(name).warmup()
 
-    def stats(self, name: Optional[str] = None) -> dict:
+    def stats(self, name: str | None = None) -> dict:
         if name is not None:
             return self._runner(name).stats()
         with self._lock:

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import random
 import time
-from typing import Iterable, Optional, Sequence
+from collections.abc import Iterable, Sequence
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -40,8 +40,8 @@ def percentile(values: Sequence[float], q: float) -> float:
     return s[k]
 
 
-def _reduce(lat: list, n_total: int, t_first: Optional[float],
-            t_last: Optional[float]) -> dict:
+def _reduce(lat: list, n_total: int, t_first: float | None,
+            t_last: float | None) -> dict:
     span = (
         (t_last - t_first)
         if (t_first is not None and t_last is not None)
@@ -77,15 +77,15 @@ class LatencyRecorder:
         self._rng = random.Random(seed)
         self._lat: list[float] = []
         self.n_total = 0
-        self.t_first: Optional[float] = None
-        self.t_last: Optional[float] = None
+        self.t_first: float | None = None
+        self.t_last: float | None = None
 
     @property
     def n_sampled_out(self) -> int:
         """Observations seen but not currently held in the reservoir."""
         return max(0, self.n_total - len(self._lat))
 
-    def record(self, latency_s: float, now: Optional[float] = None) -> None:
+    def record(self, latency_s: float, now: float | None = None) -> None:
         now = time.perf_counter() if now is None else now
         if self.t_first is None:
             self.t_first = now
@@ -100,7 +100,7 @@ class LatencyRecorder:
                 self._lat[j] = latency_s
 
     def record_many(self, latencies_s: Sequence[float],
-                    now: Optional[float] = None) -> None:
+                    now: float | None = None) -> None:
         """Record one batch of latencies with a single timestamp — the
         dispatcher's per-batch path (one ``extend`` instead of a Python
         call per request until the reservoir fills)."""
@@ -144,8 +144,8 @@ class LatencyRecorder:
         over the union, not an average of per-shard percentiles."""
         lat: list[float] = []
         n_total = 0
-        t_first: Optional[float] = None
-        t_last: Optional[float] = None
+        t_first: float | None = None
+        t_last: float | None = None
         for r in recorders:
             lat.extend(r._lat)
             n_total += r.n_total

@@ -9,7 +9,6 @@ preallocated to ``max_seq`` and sharded per the mesh rules.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +37,7 @@ class Engine:
         eos_id: int = 1,
         sample: str = "greedy",
         temperature: float = 1.0,
-        extra_inputs: Optional[dict] = None,
+        extra_inputs: dict | None = None,
     ):
         self.cfg = cfg
         self.params = params

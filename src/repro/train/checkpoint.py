@@ -17,7 +17,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
@@ -69,7 +69,7 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
     best = None

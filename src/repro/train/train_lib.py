@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import logging
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +108,7 @@ class Trainer:
         jit_train_step,
         opt_state,
         step: int = 0,
-        straggler_warn_s: Optional[float] = None,
+        straggler_warn_s: float | None = None,
     ):
         self.cfg = cfg
         self.run_cfg = run_cfg

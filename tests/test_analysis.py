@@ -1,0 +1,352 @@
+"""Static design verifier: mutation canaries and PR-7 regression closure.
+
+Every canary plants one specific defect in an otherwise-clean compiled
+design (or its emitted RTL / saved artifact) and asserts the verifier
+reports the *expected* DA0xx code — and the clean design stays silent
+across the full strategy x engine compile grid.  The two PR 7 bug
+classes are re-introduced at the source level (string-patching the
+production module and executing the mutant) and must be flagged
+statically, with distinct codes, without running a single test vector.
+"""
+
+import copy
+import json
+import re
+import sys
+import types
+from dataclasses import replace
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.pipelining as pipelining_mod
+import repro.core.verilog as verilog_mod
+from repro.analysis import (
+    CODES,
+    DesignVerificationError,
+    DiagnosticReport,
+    check_emission,
+    check_pipeline,
+    check_program,
+    required_signed_width,
+    verify_design,
+)
+from repro.analysis.__main__ import main as analysis_cli
+from repro.core.dais import DAISProgram, Term
+from repro.core.fixed_point import QInterval
+from repro.flow import CompileConfig, Flow, SolverConfig
+from repro.nn import QDense, QuantConfig, ReLU, compile_model, init_params
+from repro.runtime import load_design, save_design
+
+jax.config.update("jax_enable_x64", True)
+
+# rows-array columns (see DAISProgram.to_arrays)
+_KIND, _A, _B, _SH_A, _SH_B, _SIGN, _DEPTH, _COST, _QLO, _QHI, _QEXP = range(11)
+
+
+def _small_dense():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (QDense(12, wq), ReLU(aq), QDense(5, wq))
+    return model, (10,), QuantConfig(8, 4, signed=True)
+
+
+def _compile(config=None):
+    model, in_shape, in_quant = _small_dense()
+    params, _ = init_params(jax.random.PRNGKey(0), model, in_shape)
+    cfg = config or CompileConfig(verify="off")
+    return compile_model(model, params, in_shape, in_quant, config=cfg)
+
+
+@pytest.fixture(scope="module")
+def design():
+    return _compile()
+
+
+def _mutant(design):
+    """Shallow design copy whose packed arrays/reports can be doctored."""
+    d = copy.copy(design)
+    d.programs = [
+        None if p is None else {k: np.array(v) for k, v in p.items()}
+        for p in design.programs
+    ]
+    d.reports = list(design.reports)
+    return d
+
+
+def _first_op_row(parr):
+    rows = parr["rows"]
+    return int(np.nonzero(rows[:, _KIND] != 0)[0][0])
+
+
+# ----------------------------------------------------------------------
+# clean designs are silent
+# ----------------------------------------------------------------------
+def test_clean_design_verifies_strict(design):
+    rep = verify_design(design, tier="strict")
+    assert rep.ok, rep.summary()
+    assert {"program", "steps", "emission"} <= set(rep.pass_wall_s)
+
+
+@pytest.mark.parametrize("strategy", ["da", "latency"])
+@pytest.mark.parametrize("engine", ["batch", "arena", "heap"])
+def test_compile_grid_silent(strategy, engine):
+    cfg = CompileConfig(
+        strategy=strategy,
+        solver=SolverConfig(dc=2, engine=engine),
+        verify="strict",  # the gate itself would raise on any error
+    )
+    d = _compile(cfg)
+    v = d.solver_stats["verify"]
+    assert v["ok"] and v["tier"] == "strict"
+    assert v["n_errors"] == 0
+    assert v["wall_s"] > 0
+    assert all(layer["ok"] for layer in v["per_layer"].values())
+
+
+def test_flow_verify_returns_report(design):
+    rep = Flow.verify(design, tier="cheap")
+    assert isinstance(rep, DiagnosticReport)
+    assert rep.ok
+
+
+# ----------------------------------------------------------------------
+# mutation canaries: one defect -> one expected code
+# ----------------------------------------------------------------------
+def test_canary_stale_interval_da004(design):
+    d = _mutant(design)
+    parr = d.programs[0]
+    i = _first_op_row(parr)
+    parr["rows"][i, _QHI] += 1  # interval no longer the derived truth
+    rep = verify_design(d, tier="cheap")
+    assert not rep.ok
+    assert "DA004" in rep.codes(), rep.summary()
+
+
+def test_canary_flipped_shift_sign_da003(design):
+    d = _mutant(design)
+    parr = d.programs[0]
+    rows = parr["rows"]
+    cand = np.nonzero((rows[:, _KIND] == 1) & (rows[:, _SH_A] + rows[:, _SH_B] > 0))[0]
+    assert cand.size, "fixture program has no shifted adder to mutate"
+    i = int(cand[0])
+    col = _SH_A if rows[i, _SH_A] > 0 else _SH_B
+    rows[i, col] = -rows[i, col]
+    rep = verify_design(d, tier="cheap")
+    assert not rep.ok
+    assert "DA003" in rep.codes(), rep.summary()
+
+
+def test_canary_dangling_ref_da001(design):
+    d = _mutant(design)
+    parr = d.programs[0]
+    i = _first_op_row(parr)
+    parr["rows"][i, _A] = i  # self-reference: must name an earlier row
+    rep = verify_design(d, tier="cheap")
+    assert not rep.ok
+    assert "DA001" in rep.codes(), rep.summary()
+
+
+def test_canary_wrong_latency_da047(design):
+    d = _mutant(design)
+    d.reports[0] = replace(d.reports[0], stages=d.reports[0].stages + 1)
+    rep = verify_design(d, tier="cheap")
+    assert not rep.ok
+    assert "DA047" in rep.codes(), rep.summary()
+
+
+def test_canary_width_minus_one_da009(design):
+    prog = DAISProgram.from_arrays(design.programs[0])
+    src = verilog_mod.emit_verilog(prog, max_delay_per_stage=5)
+    m = re.search(r"(wire|reg) signed \[(\d+):0\] v\d+_s\d+", src)
+    assert m is not None
+    w = int(m.group(2))
+    doctored = src[: m.start(2)] + str(w - 1) + src[m.end(2):]
+    rep = check_emission(prog, 5, src=doctored)
+    assert "DA009" in rep.codes(), rep.summary()
+    # the undoctored emission is clean
+    assert check_emission(prog, 5, src=src).ok
+
+
+def test_canary_tampered_npz_da041(design, tmp_path):
+    path = save_design(design, tmp_path / "art")
+    with np.load(path / "design.npz", allow_pickle=False) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    key = next(k for k in sorted(arrays) if arrays[k].size)
+    arrays[key].flat[0] += 1
+    np.savez_compressed(path / "design.npz", **arrays)  # manifest kept stale
+    rep = verify_design(path, tier="cheap")
+    assert not rep.ok
+    assert "DA041" in rep.codes(), rep.summary()
+
+
+def test_canary_config_digest_da042(design, tmp_path):
+    path = save_design(design, tmp_path / "art")
+    manifest = json.loads((path / "manifest.json").read_text())
+    manifest["compile_config"]["max_delay_per_stage"] += 1
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    rep = verify_design(path, tier="cheap")
+    assert not rep.ok
+    assert "DA042" in rep.codes(), rep.summary()
+
+
+# ----------------------------------------------------------------------
+# PR 7 bug classes, re-introduced at the source level
+# ----------------------------------------------------------------------
+def _exec_mutant(module, old: str, new: str) -> types.ModuleType:
+    """Execute a copy of ``module`` with ``old`` replaced by ``new``."""
+    src = Path(module.__file__).read_text()
+    assert old in src, f"mutation anchor not found in {module.__name__}"
+    mutated = src.replace(old, new)
+    mod = types.ModuleType(module.__name__ + "_mutant")
+    mod.__package__ = module.__package__  # keep relative imports working
+    mod.__file__ = module.__file__
+    sys.modules[mod.__name__] = mod  # dataclass decorators resolve via here
+    exec(compile(mutated, module.__file__, "exec"), mod.__dict__)
+    return mod
+
+
+def _carry_tap_program():
+    """Output row consumed by an op in a LATER stage than any output.
+
+    Exactly the shape whose carry registers PR 7's ``last_use`` clobber
+    dropped: with max_delay_per_stage=1 the chained adds land in stages
+    past the output tap, so row ``o``'s value must still be carried."""
+    p = DAISProgram()
+    x0 = p.add_input(QInterval(-8, 7, 0))
+    x1 = p.add_input(QInterval(-8, 7, 0))
+    o = p.add_op(x0, x1, 0, 0, 1)
+    t = p.add_op(o, x0, 0, 0, 1)  # stage 1 consumer of the output row
+    p.add_op(t, x1, 0, 0, 1)  # keeps the late logic two stages deep
+    p.outputs = [Term(1, o, 0)]
+    return p
+
+
+def test_pr7_signed_width_bug_da009(design, monkeypatch):
+    buggy = _exec_mutant(
+        verilog_mod,
+        "w = q.width + (0 if q.lo < 0 else 1)",
+        "w = q.width",  # the pre-PR-7 emitter: no sign bit for q.lo >= 0
+    )
+    import repro.analysis.program as program_mod
+
+    # the second CMVM sits behind a ReLU, so its input rows are
+    # non-negative — exactly where the missing sign bit bites
+    prog = DAISProgram.from_arrays(design.programs[-1])
+    assert any(r.qint.lo >= 0 and not r.qint.is_zero for r in prog.rows)
+    assert check_emission(prog, 5).ok  # production emitter is clean
+    monkeypatch.setattr(program_mod, "emit_verilog", buggy.emit_verilog)
+    rep = check_emission(prog, 5)
+    assert "DA009" in rep.codes(), rep.summary()
+
+
+def test_pr7_last_use_clobber_da010():
+    buggy = _exec_mutant(
+        pipelining_mod,
+        "last_use[t.row] = max(last_use[t.row], n_stages - 1)",
+        "last_use[t.row] = n_stages - 1",  # the pre-PR-7 assignment
+    )
+    prog = _carry_tap_program()
+    assert check_pipeline(prog, 1).ok  # production pipeliner is clean
+    rep = check_pipeline(prog, 1, claimed=buggy.pipeline(prog, 1))
+    assert "DA010" in rep.codes(), rep.summary()
+
+
+def test_pr7_last_use_clobber_emission_da011(monkeypatch):
+    buggy = _exec_mutant(
+        verilog_mod,
+        "last_use[t.row] = max(last_use[t.row], n_stage - 1)",
+        "last_use[t.row] = n_stage - 1",
+    )
+    import repro.analysis.program as program_mod
+
+    prog = _carry_tap_program()
+    assert check_emission(prog, 1).ok
+    monkeypatch.setattr(program_mod, "emit_verilog", buggy.emit_verilog)
+    rep = check_emission(prog, 1)
+    assert "DA011" in rep.codes(), rep.summary()
+    # distinct codes for the two PR 7 classes (DA009 vs DA010/DA011)
+    assert not {"DA009"} & rep.codes()
+
+
+# ----------------------------------------------------------------------
+# gates: compile / load / CLI
+# ----------------------------------------------------------------------
+def test_compile_gate_records_stats():
+    d = _compile(CompileConfig())  # default tier is "cheap"
+    v = d.solver_stats["verify"]
+    assert v["tier"] == "cheap" and v["ok"]
+    # per_layer is keyed by CMVM slot name (layers deduplicate onto slots)
+    assert v["per_layer"] and all(w["ok"] for w in v["per_layer"].values())
+    assert all(isinstance(w["wall_s"], float) for w in v["per_layer"].values())
+    assert "pass_wall_s" in v and "program" in v["pass_wall_s"]
+
+
+def test_bad_verify_tier_rejected():
+    with pytest.raises(Exception, match="verify"):
+        CompileConfig(verify="bogus")
+    with pytest.raises(ValueError, match="tier"):
+        verify_design(_compile(), tier="bogus")
+
+
+def test_load_gate_raises(design, tmp_path):
+    path = save_design(design, tmp_path / "art")
+    manifest = json.loads((path / "manifest.json").read_text())
+    manifest["reports"][0]["stages"] += 1  # digest covers arrays, not reports
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(DesignVerificationError) as ei:
+        load_design(path, verify="cheap")
+    assert "DA047" in {d.code for d in ei.value.report.errors}
+    loaded = load_design(path)  # default stays off: digest-only loading
+    assert loaded.solver_stats["n_solves"] == 0
+
+
+def test_cli_roundtrip(design, tmp_path, capsys):
+    good = save_design(design, tmp_path / "good")
+    out = tmp_path / "diag.json"
+    rc = analysis_cli([str(good), "--tier", "cheap", "--json", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc[str(good)]["ok"]
+
+    bad = save_design(design, tmp_path / "bad")
+    manifest = json.loads((bad / "manifest.json").read_text())
+    manifest["resources"]["total_adders"] += 1
+    (bad / "manifest.json").write_text(json.dumps(manifest))
+    rc = analysis_cli([str(bad), "--tier", "cheap", "--quiet"])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+# ----------------------------------------------------------------------
+# unit seams
+# ----------------------------------------------------------------------
+def test_required_signed_width_rule():
+    assert required_signed_width(QInterval(0, 0, 0)) == 1
+    assert required_signed_width(QInterval(0, 1, 0)) == 2  # sign bit paid
+    assert required_signed_width(QInterval(0, 255, 0)) == 9
+    assert required_signed_width(QInterval(-1, 0, 0)) == 1
+    assert required_signed_width(QInterval(-256, 255, 0)) == 9
+
+
+def test_dead_row_warning_da008():
+    p = DAISProgram()
+    x0 = p.add_input(QInterval(-4, 3, 0))
+    x1 = p.add_input(QInterval(-4, 3, 0))
+    o = p.add_op(x0, x1, 0, 0, 1)
+    p.add_op(o, x1, 0, 0, 1)  # never tapped
+    p.outputs = [Term(1, o, 0)]
+    rep = check_program(p)
+    assert rep.ok  # warning severity: gates stay green
+    assert "DA008" in rep.codes()
+
+
+def test_codes_registry_is_stable():
+    # append-only registry: canaries and CI logs key on these meanings
+    assert CODES["DA009"][0] == "error"
+    assert CODES["DA010"][0] == "error"
+    assert CODES["DA041"][0] == "error"
+    assert CODES["DA008"][0] == "warning"
+    assert all(re.fullmatch(r"DA0\d\d", c) for c in CODES)

@@ -311,7 +311,7 @@ def design():
 def test_per_layer_solver_stats(design):
     per_layer = design.solver_stats["per_layer"]
     assert sorted(per_layer) == ["dense0", "dense1"]
-    for name, st in per_layer.items():
+    for st in per_layer.values():
         assert st["cache_hit"] is False
         assert st["solve_wall_s"] >= 0.0
         assert st["adders"] > 0 and st["cost_bits"] > 0

@@ -34,9 +34,9 @@ def designs():
     return out
 
 
-def _samples(n, in_quant=QuantConfig(8, 4, signed=True), d=8, seed=0):
+def _samples(n, in_quant=None, d=8, seed=0):
     rng = np.random.default_rng(seed)
-    q = in_quant.qint
+    q = (in_quant or QuantConfig(8, 4, signed=True)).qint
     return np.asarray(rng.integers(q.lo, q.hi + 1, size=(n, d)), np.int32)
 
 

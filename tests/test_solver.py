@@ -103,7 +103,7 @@ def test_table2_16x16_adder_counts():
     rng = np.random.default_rng(0)
     counts = {-1: [], 0: [], 2: []}
     base_counts = []
-    for trial in range(3):
+    for _trial in range(3):
         m = rng.integers(2**7 + 1, 2**8, size=(16, 16))
         base_counts.append(naive_adder_tree(m).n_adders)
         for dc in counts:
