@@ -1,0 +1,445 @@
+"""Chaos soak bench: the resilience layer under scripted fire.
+
+Four legs, all driven through :mod:`repro.chaos` fault plans against a
+compiled 16x16 8-bit CMVM design:
+
+  deterministic   1 shard, ``at=``-scheduled faults, exact counters:
+                  the breaker trips after exactly ``threshold``
+                  consecutive injected dispatch failures, open-state
+                  requests fail fast, an expired deadline is shed, and
+                  the interpreter fallback answers bit-exactly while
+                  the jit path fails on every dispatch.
+  recovery        small cooldown: after a trip, the half-open probe
+                  closes the breaker and normal service resumes
+                  (recovery wall time recorded).
+  soak            4 shards, rate-scheduled faults (jit failure + slab
+                  gather failure + dispatcher thread kills) with the
+                  interpreter fallback and supervision armed; the gate
+                  invariant is the engine's core promise: **every
+                  submitted future resolves within the bound, no
+                  dispatcher hang, and every slab slot returns to the
+                  free list** — plus the degraded throughput is
+                  recorded for the trajectory baseline.
+  overhead        the zero-cost-when-disabled claim, gated like
+                  ``REPRO_TRACE``: serve throughput with no plan
+                  installed vs an installed plan whose rules target
+                  only artifact sites (the serve-path ``fault_point``
+                  still runs) must stay within 1.05x CPU-seconds, with
+                  an absolute noise floor; plus raw ns/call for the
+                  disabled ``fault_point``.
+
+Prints the usual ``name,us_per_call,derived`` CSV; ``--json PATH``
+writes the ``BENCH_chaos.json``-compatible report compared by
+``benchmarks/perf_gate.py --kind chaos``.  Exit 1 if any deterministic
+leg fails, a future hangs or a slab slot leaks in the soak, or the
+disabled-path overhead exceeds its bound.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from concurrent.futures import TimeoutError as FutureTimeoutError
+
+import numpy as np
+
+RESOLVE_TIMEOUT_S = 20.0
+
+
+def _build_design(m: int = 16, w_bits: int = 8, seed: int = 0):
+    import jax
+
+    from repro.flow import CompileConfig, Flow, SolverConfig
+    from repro.nn import QDense, QuantConfig, init_params
+
+    wq = QuantConfig(w_bits, 2, signed=True)
+    model = (QDense(m, wq),)
+    in_quant = QuantConfig(8, 4, signed=True)
+    params, _ = init_params(jax.random.PRNGKey(seed), model, (m,))
+    design = Flow.compile(
+        model, params, (m,), in_quant,
+        config=CompileConfig(solver=SolverConfig(dc=2)),
+    )
+    rng = np.random.default_rng(seed + 1)
+    q = in_quant.qint
+    samples = np.asarray(
+        rng.integers(q.lo, q.hi + 1, size=(256, m)), np.int32
+    )
+    return design, samples
+
+
+def _engine(design, **overrides):
+    from repro.flow import ServeConfig
+    from repro.runtime import ServeEngine
+
+    base = dict(max_batch=8, max_wait_us=0.0, shards=1)
+    base.update(overrides)
+    eng = ServeEngine(config=ServeConfig(**base))
+    eng.register("m", design, warmup=True)
+    return eng
+
+
+def _slab_slots_leaked(eng, name="m") -> int:
+    """Free-list audit across live AND retired (crashed) shards."""
+    runner = eng._runner(name)
+    with runner._restart_lock:
+        shards = list(runner._retired) + list(runner.shards)
+    leaked = 0
+    for sh in shards:
+        with sh._lock:
+            leaked += sh.slab.shape[0] - len(sh._free) + len(sh._pending)
+    return leaked
+
+
+def _leg_deterministic(design, samples) -> dict:
+    """Exact-count assertions under ``at=``-scheduled faults."""
+    from repro.chaos import FaultInjectedError, FaultPlan, FaultRule, active
+    from repro.runtime import CircuitOpenError, DeadlineExceededError
+
+    out: dict = {}
+    want = np.asarray(design.forward_int(samples))
+
+    # breaker trip + fast fail (cooldown far past the leg's duration)
+    plan = FaultPlan([FaultRule("serve.dispatch", at=(0, 1))])
+    with active(plan):
+        eng = _engine(
+            design, breaker_threshold=2,
+            breaker_cooldown_ms=60_000.0, breaker_cooldown_max_ms=60_000.0,
+        )
+        try:
+            n_injected = n_fast = 0
+            for i in range(3):
+                try:
+                    eng.submit("m", samples[i]).result(RESOLVE_TIMEOUT_S)
+                except FaultInjectedError:
+                    n_injected += 1
+                except CircuitOpenError:
+                    n_fast += 1
+            s = eng.stats("m")
+            out["breaker_trip"] = {
+                "n_injected": n_injected,
+                "n_fast_failed": s["n_fast_failed"],
+                "state": s["breaker"]["state"],
+                "n_trips": s["breaker"]["n_trips"],
+                "ok": bool(
+                    n_injected == 2 and n_fast == 1
+                    and s["breaker"]["state"] == "open"
+                    and s["breaker"]["n_trips"] == 1
+                    and s["n_fast_failed"] == 1
+                ),
+            }
+        finally:
+            eng.shutdown()
+
+    # deadline shed at the door: exact counter
+    eng = _engine(design)
+    try:
+        try:
+            eng.submit("m", samples[0], deadline_s=0.0).result(RESOLVE_TIMEOUT_S)
+            shed_typed = False
+        except DeadlineExceededError:
+            shed_typed = True
+        n_shed = eng.stats("m")["n_shed"]
+        out["shed"] = {
+            "typed": shed_typed,
+            "n_shed": n_shed,
+            "ok": bool(shed_typed and n_shed == 1),
+        }
+    finally:
+        eng.shutdown()
+
+    # interpreter fallback: jit fails on every dispatch, answers stay
+    # bit-exact through the numpy interpreter
+    plan = FaultPlan([FaultRule("serve.dispatch", rate=1.0)])
+    with active(plan):
+        eng = _engine(
+            design, fallback="interpreter",
+            breaker_threshold=2, breaker_cooldown_ms=50.0,
+        )
+        try:
+            n = 32
+            futs = [eng.submit("m", x) for x in samples[:n]]
+            got = np.stack([f.result(RESOLVE_TIMEOUT_S) for f in futs])
+            s = eng.stats("m")
+            out["fallback"] = {
+                "bit_exact": bool(np.array_equal(got, want[:n])),
+                "n_fallback_batches": s["n_fallback_batches"],
+                "breaker_state": s["breaker"]["state"],
+                "ok": bool(
+                    np.array_equal(got, want[:n])
+                    and s["n_fallback_batches"] > 0
+                ),
+            }
+        finally:
+            eng.shutdown()
+    return out
+
+
+def _leg_recovery(design, samples) -> dict:
+    """Trip with two scheduled failures, then measure the wall time from
+    the trip until a request is served normally again."""
+    from repro.chaos import FaultInjectedError, FaultPlan, FaultRule, active
+    from repro.runtime import CircuitOpenError
+
+    plan = FaultPlan([FaultRule("serve.dispatch", at=(0, 1))])
+    with active(plan):
+        eng = _engine(design, breaker_threshold=2, breaker_cooldown_ms=50.0)
+        try:
+            for i in range(2):
+                try:
+                    eng.submit("m", samples[i]).result(RESOLVE_TIMEOUT_S)
+                except FaultInjectedError:
+                    pass
+            t_trip = time.perf_counter()
+            tripped = eng.stats("m")["breaker"]["state"] == "open"
+            recovered_s = None
+            deadline = t_trip + 5.0
+            while time.perf_counter() < deadline:
+                try:
+                    eng.submit("m", samples[2]).result(RESOLVE_TIMEOUT_S)
+                    recovered_s = time.perf_counter() - t_trip
+                    break
+                except (CircuitOpenError, FaultInjectedError):
+                    time.sleep(0.01)
+            s = eng.stats("m")
+            return {
+                "tripped": tripped,
+                "recovery_s": recovered_s,
+                "n_recoveries": s["breaker"]["n_recoveries"],
+                "state": s["breaker"]["state"],
+                "ok": bool(
+                    tripped and recovered_s is not None
+                    and s["breaker"]["state"] == "closed"
+                    and s["breaker"]["n_recoveries"] >= 1
+                ),
+            }
+        finally:
+            eng.shutdown()
+
+
+def _leg_soak(design, samples, n_requests: int, shards: int, seed: int) -> dict:
+    """Rate-scheduled fault storm over a sharded engine; the invariant is
+    full resolution + zero slab leaks, with degraded throughput recorded."""
+    from repro.chaos import FaultPlan, FaultRule, active
+
+    plan = FaultPlan(
+        [
+            FaultRule("serve.dispatch", rate=0.05),
+            FaultRule("serve.gather", rate=0.02),
+            FaultRule("serve.dispatcher", mode="kill_thread", rate=0.02, max_fires=2),
+        ],
+        seed=seed,
+    )
+    with active(plan):
+        eng = _engine(
+            design,
+            max_batch=8, max_wait_us=200.0, shards=shards,
+            fallback="interpreter",
+            breaker_threshold=4, breaker_cooldown_ms=20.0,
+            supervise=True, restart_budget=4,
+        )
+        try:
+            want = np.asarray(design.forward_int(samples))
+            k = len(samples)
+            t0 = time.perf_counter()
+            futs = []
+            for i in range(0, n_requests, 16):
+                chunk = [samples[(i + j) % k] for j in range(16)]
+                if (i // 16) % 3 == 0:
+                    futs.extend(eng.submit_batch("m", chunk))
+                else:
+                    futs.extend(eng.submit("m", x) for x in chunk)
+            n_ok = n_err = n_hung = n_inexact = 0
+            for i, f in enumerate(futs):
+                try:
+                    exc = f.exception(timeout=RESOLVE_TIMEOUT_S)
+                except FutureTimeoutError:
+                    n_hung += 1
+                    continue
+                if exc is None:
+                    if not np.array_equal(f.result(0), want[i % k]):
+                        n_inexact += 1
+                    n_ok += 1
+                else:
+                    n_err += 1
+            elapsed = time.perf_counter() - t0
+            leaked = _slab_slots_leaked(eng)
+            s = eng.stats("m")
+            return {
+                "shards": shards,
+                "n_requests": len(futs),
+                "n_ok": n_ok,
+                "n_err": n_err,
+                "n_hung": n_hung,
+                "n_inexact": n_inexact,
+                "slab_slots_leaked": leaked,
+                "degraded_rps": len(futs) / elapsed if elapsed > 0 else 0.0,
+                "n_crashes": s["supervision"]["n_crashes"],
+                "n_restarts": s["supervision"]["n_restarts"],
+                "healthy": s["supervision"]["healthy"],
+                "n_fallback_batches": s["n_fallback_batches"],
+                "breaker_trips": s["breaker"]["n_trips"],
+                "fault_stats": plan.stats(),
+                "all_resolved": n_hung == 0,
+                "ok": bool(
+                    n_hung == 0 and leaked == 0 and n_inexact == 0 and n_ok > 0
+                ),
+            }
+        finally:
+            eng.shutdown()
+
+
+def _leg_overhead(design, samples, n_requests: int) -> dict:
+    """Disabled-path cost: serve throughput with no plan vs an installed
+    plan whose rules never target the serve sites (the serve-path
+    ``fault_point`` gate still executes every batch), plus raw ns/call
+    of a disabled ``fault_point``."""
+    from repro.chaos import FaultPlan, FaultRule, active, fault_point
+
+    def run_leg(n):
+        eng = _engine(design, max_batch=8, max_wait_us=50.0)
+        try:
+            t0, c0 = time.perf_counter(), time.process_time()
+            futs = [eng.submit("m", samples[i % len(samples)]) for i in range(n)]
+            for f in futs:
+                f.result(RESOLVE_TIMEOUT_S)
+            return time.perf_counter() - t0, time.process_time() - c0
+        finally:
+            eng.shutdown()
+
+    run_leg(max(64, n_requests // 8))  # warm both code paths
+    disabled_wall, disabled_cpu = run_leg(n_requests)
+    plan = FaultPlan([FaultRule("artifact.load.read", rate=1.0)])
+    with active(plan):
+        enabled_wall, enabled_cpu = run_leg(n_requests)
+
+    n_calls = 1_000_000
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        fault_point("serve.dispatch")
+    ns_per_call = (time.perf_counter() - t0) / n_calls * 1e9
+
+    ratio = enabled_cpu / disabled_cpu if disabled_cpu > 0 else 1.0
+    delta = enabled_cpu - disabled_cpu
+    limit = 1.05
+    # an absolute floor: on fast machines both legs are fractions of a
+    # second and the ratio is pure scheduler noise
+    ok = bool(ratio <= limit or delta <= 0.15)
+    return {
+        "n_requests": n_requests,
+        "disabled_cpu_s": disabled_cpu,
+        "enabled_cpu_s": enabled_cpu,
+        "disabled_wall_s": disabled_wall,
+        "enabled_wall_s": enabled_wall,
+        "overhead_ratio": ratio,
+        "overhead_delta_s": delta,
+        "overhead_limit": limit,
+        "fault_point_disabled_ns": ns_per_call,
+        "ok": ok,
+    }
+
+
+def run(
+    m: int = 16,
+    w_bits: int = 8,
+    soak_requests: int = 512,
+    soak_shards: int = 4,
+    overhead_requests: int = 1024,
+    seed: int = 1234,
+) -> dict:
+    design, samples = _build_design(m, w_bits)
+    deterministic = _leg_deterministic(design, samples)
+    recovery = _leg_recovery(design, samples)
+    soak = _leg_soak(design, samples, soak_requests, soak_shards, seed)
+    overhead = _leg_overhead(design, samples, overhead_requests)
+    return {
+        "bench": "chaos_soak",
+        "n_cpus": os.cpu_count(),
+        "m": m,
+        "w_bits": w_bits,
+        "seed": seed,
+        "deterministic": deterministic,
+        "recovery": recovery,
+        "soak": soak,
+        "overhead": overhead,
+    }
+
+
+def passed(r: dict) -> bool:
+    d = r["deterministic"]
+    return bool(
+        d["breaker_trip"]["ok"]
+        and d["shed"]["ok"]
+        and d["fallback"]["ok"]
+        and r["recovery"]["ok"]
+        and r["soak"]["ok"]
+        and r["overhead"]["ok"]
+    )
+
+
+def main(csv: bool = True, json_path=None, **kw) -> dict:
+    r = run(**kw)
+    if csv:
+        soak, ov = r["soak"], r["overhead"]
+        print("name,us_per_call,derived")
+        print(
+            f"chaos_soak_m{r['m']},"
+            f"{1e6 / max(soak['degraded_rps'], 1e-9):.1f},"
+            f"degraded_rps={soak['degraded_rps']:.0f};"
+            f"shards={soak['shards']};ok={soak['n_ok']};err={soak['n_err']};"
+            f"hung={soak['n_hung']};leaked={soak['slab_slots_leaked']};"
+            f"crashes={soak['n_crashes']};restarts={soak['n_restarts']};"
+            f"fallback_batches={soak['n_fallback_batches']};"
+            f"breaker_trips={soak['breaker_trips']};"
+            f"healthy={int(soak['healthy'])}"
+        )
+        print(
+            f"chaos_deterministic,0.0,"
+            f"trip_ok={int(r['deterministic']['breaker_trip']['ok'])};"
+            f"shed_ok={int(r['deterministic']['shed']['ok'])};"
+            f"fallback_ok={int(r['deterministic']['fallback']['ok'])};"
+            f"recovery_ok={int(r['recovery']['ok'])};"
+            f"recovery_s={r['recovery']['recovery_s'] or -1:.3f}"
+        )
+        print(
+            f"chaos_overhead,{ov['fault_point_disabled_ns'] / 1e3:.4f},"
+            f"ratio={ov['overhead_ratio']:.3f};limit={ov['overhead_limit']};"
+            f"delta_s={ov['overhead_delta_s']:+.3f};ok={int(ov['ok'])}"
+        )
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(r, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}", file=sys.stderr)
+    return r
+
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    kw: dict = {}
+    json_path = None
+    if "--json" in args:
+        k = args.index("--json")
+        json_path = args[k + 1]
+        del args[k : k + 2]
+
+    def _pop(flag, cast):
+        if flag in args:
+            k = args.index(flag)
+            val = cast(args[k + 1])
+            del args[k : k + 2]
+            return val
+        return None
+
+    v = _pop("--soak-requests", int)
+    if v is not None:
+        kw["soak_requests"] = v
+    v = _pop("--soak-shards", int)
+    if v is not None:
+        kw["soak_shards"] = v
+    v = _pop("--seed", int)
+    if v is not None:
+        kw["seed"] = v
+    result = main(json_path=json_path, **kw)
+    sys.exit(0 if passed(result) else 1)

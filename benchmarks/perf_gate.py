@@ -14,7 +14,14 @@ Three kinds (``--kind``):
     deterministic (the solver and the simulator are pure functions of
     the seeds): any bit mismatch or latency violation fails, the fresh
     grid must cover every baseline case, and per-case adder counts /
-    cost bits / stage structure must match the baseline exactly.
+    cost bits / stage structure must match the baseline exactly;
+  * ``chaos``  — ``chaos_soak`` vs ``BENCH_chaos.json``: the
+    deterministic legs (breaker trip counts, deadline shed, bit-exact
+    interpreter fallback, half-open recovery) and the soak invariants
+    (every future resolved, zero slab-slot leaks) are hard failures;
+    the disabled-path overhead ratio is gated against its in-report
+    limit; degraded soak throughput must not drop more than
+    ``tolerance`` below baseline.
 
 Two classes of check:
 
@@ -280,17 +287,83 @@ def compare_rtl(fresh: dict, baseline: dict) -> list[str]:
     return violations
 
 
+def compare_chaos(fresh: dict, baseline: dict, tolerance: float = 0.5) -> list[str]:
+    """Chaos-soak gate: resilience correctness is deterministic, the
+    degraded-throughput trajectory is tolerance-bounded.
+
+    Returns a list of violation messages (empty = gate passes).
+    """
+    violations: list[str] = []
+    det = fresh.get("deterministic", {})
+    soak = fresh.get("soak", {})
+    ov = fresh.get("overhead", {})
+    checks = [
+        ("breaker_trip", det.get("breaker_trip", {}).get("ok", False),
+         "breaker did not trip/fast-fail on the scheduled failure burst"),
+        ("shed", det.get("shed", {}).get("ok", False),
+         "expired deadline was not shed with the typed error"),
+        ("fallback", det.get("fallback", {}).get("ok", False),
+         "interpreter fallback missing or not bit-exact"),
+        ("recovery", fresh.get("recovery", {}).get("ok", False),
+         "breaker did not recover through the half-open probe"),
+        ("soak.all_resolved", soak.get("all_resolved", False),
+         f"{soak.get('n_hung')} futures hung under the fault storm"),
+        ("soak.no_leaks", soak.get("slab_slots_leaked", -1) == 0,
+         f"{soak.get('slab_slots_leaked')} slab slots leaked"),
+        ("soak.bit_exact", soak.get("n_inexact", -1) == 0,
+         f"{soak.get('n_inexact')} successful results were not bit-exact"),
+        ("soak.served", soak.get("n_ok", 0) > 0,
+         "soak served zero successful requests"),
+    ]
+    for name, ok, why in checks:
+        status = "ok" if ok else "FAIL"
+        print(f"chaos/{name}: {status}")
+        if not ok:
+            violations.append(f"chaos/{name}: {why} (deterministic)")
+    ratio = ov.get("overhead_ratio")
+    if ratio is not None:
+        ok = ov.get("ok", False)
+        status = "ok" if ok else "REGRESSION"
+        print(
+            f"chaos/overhead: disabled-path ratio {ratio:.3f} "
+            f"(limit {ov.get('overhead_limit')}, "
+            f"delta {ov.get('overhead_delta_s', 0.0):+.3f}s) {status}"
+        )
+        if not ok:
+            violations.append(
+                f"chaos/overhead: disabled fault_point costs {ratio:.3f}x "
+                f"(> {ov.get('overhead_limit')}) with "
+                f"{ov.get('overhead_delta_s', 0.0):.3f}s absolute delta"
+            )
+    f_rps = soak.get("degraded_rps")
+    b_rps = baseline.get("soak", {}).get("degraded_rps")
+    if f_rps is not None and b_rps:
+        limit = b_rps / (1.0 + tolerance)
+        status = "ok" if f_rps >= limit else "REGRESSION"
+        print(
+            f"chaos/degraded_rps: {f_rps:.0f} vs baseline {b_rps:.0f} "
+            f"(limit {limit:.0f}) {status}"
+        )
+        if f_rps < limit:
+            violations.append(
+                f"chaos/degraded_rps: {f_rps:.0f} under {limit:.0f} "
+                f"(> {tolerance:.0%} below baseline)"
+            )
+    return violations
+
+
 _DEFAULT_BASELINES = {
     "solver": "BENCH_solver.json",
     "serve": "BENCH_serve.json",
     "rtl": "BENCH_rtl.json",
+    "chaos": "BENCH_chaos.json",
 }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", required=True, help="fresh bench JSON")
-    ap.add_argument("--kind", choices=("solver", "serve", "rtl"),
+    ap.add_argument("--kind", choices=("solver", "serve", "rtl", "chaos"),
                     default="solver",
                     help="which bench family the JSONs belong to")
     ap.add_argument(
@@ -328,6 +401,8 @@ def main(argv=None) -> int:
         baseline = json.load(fh)
     if args.kind == "rtl":
         violations = compare_rtl(fresh, baseline)
+    elif args.kind == "chaos":
+        violations = compare_chaos(fresh, baseline, args.tolerance)
     elif args.kind == "serve":
         violations = compare_serve(
             fresh, baseline, args.tolerance, args.p99_floor_ms

@@ -9,6 +9,7 @@
     rtl_cosim               RTL co-simulation gate (three-way bit-exact)
     obs_trace               telemetry layer gate (trace/metrics/flight)
     lint_designs            static design-verifier gate (repro.analysis)
+    chaos_soak              fault-injection soak gate (repro.chaos)
     lm_step_bench           framework substrate microbench
 
 Prints ``name,us_per_call,derived`` CSV.  ``run.py smoke --json PATH``
@@ -34,6 +35,7 @@ BENCH_SOLVER_JSON = _REPO_ROOT / "BENCH_solver.json"
 _BASELINES = {
     "smoke": BENCH_SOLVER_JSON,
     "rtl": _REPO_ROOT / "BENCH_rtl.json",
+    "chaos": _REPO_ROOT / "BENCH_chaos.json",
 }
 
 
@@ -59,6 +61,7 @@ def main() -> None:
         "rtl": "rtl_cosim",
         "obs": "obs_trace",
         "lint": "lint_designs",
+        "chaos": "chaos_soak",
         "lm": "lm_step_bench",
     }
     failed = False
@@ -67,7 +70,7 @@ def main() -> None:
             continue
         mod = importlib.import_module(f".{modname}", __package__)
         print(f"# --- {name} ({mod.__name__}) ---", flush=True)
-        if name in ("smoke", "serve", "rtl", "obs", "lint"):
+        if name in ("smoke", "serve", "rtl", "obs", "lint", "chaos"):
             # gated benches: JSON artifact + exit-1 on budget/exactness
             # failure.  --json targets the explicitly selected bench
             # (or smoke, the historical default, when running all).

@@ -1,0 +1,35 @@
+"""Deterministic fault injection for resilience testing.
+
+See :mod:`repro.chaos.plan` for the fault-site registry and plan spec,
+and ``docs/robustness.md`` for how the runtime consumes each site.
+"""
+
+from repro.chaos.plan import (
+    MODES,
+    SITES,
+    FaultInjectedError,
+    FaultPlan,
+    FaultRule,
+    ThreadKillFault,
+    active,
+    fault_point,
+    get_plan,
+    io_fault,
+    plan_from_spec,
+    set_plan,
+)
+
+__all__ = [
+    "MODES",
+    "SITES",
+    "FaultInjectedError",
+    "FaultPlan",
+    "FaultRule",
+    "ThreadKillFault",
+    "active",
+    "fault_point",
+    "get_plan",
+    "io_fault",
+    "plan_from_spec",
+    "set_plan",
+]

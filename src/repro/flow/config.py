@@ -279,6 +279,27 @@ class ServeConfig(_ConfigBase):
     shards        dispatch shards per model: each shard is one request
                   queue + payload slab + dispatcher thread behind the
                   shared submit path (1 = the single-dispatcher engine).
+
+    Resilience knobs (see docs/robustness.md):
+
+    deadline_ms   default per-request deadline: requests not dispatched
+                  within this budget are *shed* — failed with
+                  DeadlineExceededError instead of executed (None: no
+                  default; per-call ``deadline_s`` always wins).
+    fallback      degraded mode while the circuit breaker is open:
+                  "none" fails fast with CircuitOpenError; "interpreter"
+                  serves batches through the bit-exact numpy StepSpec
+                  interpreter (correct answers at reduced throughput).
+    breaker_threshold      consecutive dispatch failures that trip the
+                  per-model breaker (closed -> open).
+    breaker_cooldown_ms    initial open-state cooldown before a single
+                  half-open probe; doubles on every failed probe.
+    breaker_cooldown_max_ms  cap on the exponential cooldown backoff.
+    supervise     run a per-model supervisor thread that detects dead
+                  dispatcher threads and restarts them.
+    restart_budget  dispatcher restarts allowed per shard before the
+                  model is escalated to unhealthy (submits then fail
+                  with ModelUnhealthyError).
     """
 
     max_batch: int = 256
@@ -287,6 +308,13 @@ class ServeConfig(_ConfigBase):
     backpressure: str = "block"
     buckets: tuple | None = None
     shards: int = 1
+    deadline_ms: float | None = None
+    fallback: str = "none"
+    breaker_threshold: int = 8
+    breaker_cooldown_ms: float = 250.0
+    breaker_cooldown_max_ms: float = 8000.0
+    supervise: bool = True
+    restart_budget: int = 2
 
     def __post_init__(self) -> None:
         self._require(
@@ -308,6 +336,38 @@ class ServeConfig(_ConfigBase):
         self._require(
             isinstance(self.shards, int) and self.shards >= 1,
             f"shards must be >= 1, got {self.shards}",
+        )
+        self._require(
+            self.deadline_ms is None
+            or (isinstance(self.deadline_ms, (int, float)) and self.deadline_ms > 0),
+            f"deadline_ms must be None or > 0, got {self.deadline_ms}",
+        )
+        self._require(
+            self.fallback in ("none", "interpreter"),
+            f"fallback must be 'none' or 'interpreter', got {self.fallback!r}",
+        )
+        self._require(
+            isinstance(self.breaker_threshold, int) and self.breaker_threshold >= 1,
+            f"breaker_threshold must be >= 1, got {self.breaker_threshold}",
+        )
+        self._require(
+            isinstance(self.breaker_cooldown_ms, (int, float))
+            and self.breaker_cooldown_ms > 0,
+            f"breaker_cooldown_ms must be > 0, got {self.breaker_cooldown_ms}",
+        )
+        self._require(
+            isinstance(self.breaker_cooldown_max_ms, (int, float))
+            and self.breaker_cooldown_max_ms >= self.breaker_cooldown_ms,
+            "breaker_cooldown_max_ms must be >= breaker_cooldown_ms, got "
+            f"{self.breaker_cooldown_max_ms}",
+        )
+        self._require(
+            isinstance(self.supervise, bool),
+            f"supervise must be a bool, got {self.supervise!r}",
+        )
+        self._require(
+            isinstance(self.restart_budget, int) and self.restart_budget >= 0,
+            f"restart_budget must be >= 0, got {self.restart_budget}",
         )
         if self.buckets is not None:
             buckets = tuple(sorted(int(b) for b in self.buckets))

@@ -55,16 +55,24 @@ class Flow:
         )
 
     @staticmethod
-    def load(path: str | Path, verify: str = "off") -> CompiledDesign:
+    def load(
+        path: str | Path, verify: str = "off", on_corrupt: str = "raise"
+    ) -> CompiledDesign:
         """Load a ``design.save(path)`` artifact (zero solver calls).
 
         ``verify`` runs the static verifier on the loaded design
         ("off" default, "cheap", "strict"); error-severity findings
         raise :class:`repro.analysis.DesignVerificationError`.
+
+        Torn/truncated/mixed-generation artifacts raise
+        :class:`repro.runtime.ArtifactCorruptError`;
+        ``on_corrupt="quarantine"`` first renames the damaged directory
+        to ``<name>.quarantined`` so a sweep over an artifact store can
+        catch, log, and continue.
         """
         from ..runtime.artifact import load_design
 
-        return load_design(path, verify=verify)
+        return load_design(path, verify=verify, on_corrupt=on_corrupt)
 
     @staticmethod
     def verify(design_or_path, tier: str = "strict"):
@@ -255,14 +263,27 @@ class Deployment:
         raise KeyError(f"model {name!r}: active version kept changing; giving up")
 
     # -- serving (alias-resolved passthrough) --------------------------
-    def submit(self, name: str, x: np.ndarray):
-        return self._on_active(name, lambda key: self.engine.submit(key, x))
+    def submit(self, name: str, x: np.ndarray, deadline_s: float | None = None):
+        return self._on_active(
+            name, lambda key: self.engine.submit(key, x, deadline_s=deadline_s)
+        )
 
-    def submit_batch(self, name: str, xs) -> list:
-        return self._on_active(name, lambda key: self.engine.submit_batch(key, xs))
+    def submit_batch(self, name: str, xs, deadline_s: float | None = None) -> list:
+        return self._on_active(
+            name, lambda key: self.engine.submit_batch(key, xs, deadline_s=deadline_s)
+        )
 
-    def infer(self, name: str, x: np.ndarray, timeout: float | None = 30.0):
-        return self._on_active(name, lambda key: self.engine.infer(key, x, timeout))
+    def infer(
+        self,
+        name: str,
+        x: np.ndarray,
+        timeout: float | None = 30.0,
+        deadline_s: float | None = None,
+    ):
+        return self._on_active(
+            name,
+            lambda key: self.engine.infer(key, x, timeout, deadline_s=deadline_s),
+        )
 
     def warmup(self, name: str) -> float:
         return self._on_active(name, self.engine.warmup)

@@ -16,6 +16,7 @@ from .layers import (
     apply_model,
 )
 from .compiler import CompiledDesign, LayerReport, StepSpec, build_steps, compile_model
+from .interpreter import adder_graph_numpy, build_numpy_steps, numpy_forward_fn
 from . import models
 
 __all__ = [
@@ -23,7 +24,10 @@ __all__ = [
     "CompiledDesign",
     "LayerReport",
     "StepSpec",
+    "adder_graph_numpy",
+    "build_numpy_steps",
     "build_steps",
+    "numpy_forward_fn",
     "Flatten",
     "MaxPool2D",
     "QConv2D",

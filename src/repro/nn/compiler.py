@@ -126,13 +126,17 @@ class CompiledDesign:
         return save_design(self, path)
 
     @classmethod
-    def load(cls, path, verify: str = "off") -> "CompiledDesign":
+    def load(
+        cls, path, verify: str = "off", on_corrupt: str = "raise"
+    ) -> "CompiledDesign":
         """Rebuild a design from a ``save_design`` artifact — millisecond
         cold start, zero CMVM solves, bit-identical execution.  ``verify``
-        optionally runs the static verifier on the rebuilt design."""
+        optionally runs the static verifier on the rebuilt design;
+        ``on_corrupt="quarantine"`` moves a damaged artifact aside before
+        raising :class:`repro.runtime.ArtifactCorruptError`."""
         from ..runtime.artifact import load_design  # lazy: runtime imports nn
 
-        return load_design(path, verify=verify)
+        return load_design(path, verify=verify, on_corrupt=on_corrupt)
 
     @property
     def total_adders(self) -> int:

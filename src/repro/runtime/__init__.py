@@ -1,22 +1,47 @@
 """Deployable DA runtime: compile once, serve many.
 
     save_design / load_design   no-pickle .npz + JSON design artifacts
-                                (cold-start in ms, zero solver calls)
+                                (cold-start in ms, zero solver calls,
+                                crash-safe ordered commit)
     ServeEngine                 microbatched multi-model serving engine
+                                with deadlines, circuit breaking and
+                                shard supervision
+    CircuitBreaker              closed/open/half-open dispatch breaker
     LatencyRecorder             p50/p95/p99 + throughput accounting
 """
 
-from .artifact import FORMAT_NAME, FORMAT_VERSION, load_design, save_design
-from .engine import EngineClosedError, QueueFullError, ServeEngine
+from .artifact import (
+    FORMAT_NAME,
+    FORMAT_VERSION,
+    ArtifactCorruptError,
+    load_design,
+    save_design,
+)
+from .engine import (
+    CircuitOpenError,
+    DeadlineExceededError,
+    EngineClosedError,
+    ModelUnhealthyError,
+    QueueFullError,
+    ServeEngine,
+    ShardCrashedError,
+)
 from .metrics import LatencyRecorder, StageAccumulator, percentile
+from .resilience import CircuitBreaker
 
 __all__ = [
+    "ArtifactCorruptError",
+    "CircuitBreaker",
+    "CircuitOpenError",
+    "DeadlineExceededError",
     "EngineClosedError",
     "FORMAT_NAME",
     "FORMAT_VERSION",
     "LatencyRecorder",
+    "ModelUnhealthyError",
     "QueueFullError",
     "ServeEngine",
+    "ShardCrashedError",
     "StageAccumulator",
     "load_design",
     "percentile",

@@ -24,17 +24,32 @@ Layout of ``<path>/``:
                     resource reports, compile-time solver stats.
     design.npz      all integer arrays (programs, biases, shifts,
                     requant deltas, output qints), int64, no pickle.
+
+Crash safety: ``save_design`` commits in order — arrays first, manifest
+last — with each file written to a temp name, fsync'd, atomically
+renamed into place, and the directory fsync'd after each rename.  The
+manifest (which binds the arrays by content digest) is therefore the
+commit record: a crash at any point leaves either the previous complete
+artifact or a stray temp file, never a manifest pointing at missing or
+torn arrays.  ``load_design`` maps every torn/truncated/mixed-generation
+shape to :class:`ArtifactCorruptError` (a ``ValueError``) and can
+optionally quarantine the corrupt directory aside so a cold-start sweep
+over an artifact store survives one bad entry.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
+import os
 import time
+import zipfile
 from dataclasses import asdict
 from pathlib import Path
 
 import numpy as np
+
+from ..chaos import fault_point, io_fault
 
 from ..core.dais import DAISProgram, qints_from_array, qints_to_array
 from ..flow.config import CompileConfig
@@ -45,6 +60,39 @@ from ..nn.quant import QuantConfig
 FORMAT_NAME = "da4ml-design"
 FORMAT_VERSION = 1
 _PROGRAM_KEYS = ("rows", "outputs", "n_inputs")
+
+
+class ArtifactCorruptError(ValueError):
+    """The artifact directory exists but its contents are damaged —
+    truncated/torn ``design.npz``, unparsable ``manifest.json``, a
+    manifest whose content digest does not match the arrays
+    (mixed-generation), or arrays missing keys the manifest references.
+
+    Subclasses ``ValueError`` so callers that guarded loads with the
+    historical ``except ValueError`` keep working.  When
+    ``load_design(..., on_corrupt="quarantine")`` moved the directory
+    aside, the destination is recorded on ``quarantined_to``.
+    """
+
+    def __init__(self, message: str, quarantined_to: Path | None = None):
+        super().__init__(message)
+        self.quarantined_to = quarantined_to
+
+
+def _fsync_replace(tmp: Path, dst: Path) -> None:
+    """fsync ``tmp``, rename it over ``dst``, fsync the directory.
+
+    The file fsync makes the rename publish *complete* contents; the
+    directory fsync makes the rename itself durable, so a crash cannot
+    reorder "manifest committed" before "arrays durable"."""
+    with open(tmp, "rb") as fh:
+        os.fsync(fh.fileno())
+    tmp.replace(dst)
+    dfd = os.open(dst.parent, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _arrays_digest(arrays: dict[str, np.ndarray]) -> str:
@@ -155,16 +203,52 @@ def save_design(design: CompiledDesign, path: str | Path) -> Path:
         },
     }
 
+    # ordered commit: arrays first, manifest (the commit record) last.
+    # Each step is write-temp -> fsync -> rename -> fsync-dir, so a
+    # crash anywhere leaves the previous complete artifact (or a stray
+    # *.tmp.* the next save overwrites), never a manifest that points
+    # at missing or torn arrays.  The chaos fault points let
+    # tests/test_chaos.py provoke every interleaving.
     tmp = path / "design.tmp.npz"
+    fault_point("artifact.save.arrays")
     np.savez_compressed(tmp, **arrays)
-    tmp.replace(path / "design.npz")
+    io_fault("artifact.save.truncate", tmp)  # simulated torn write
+    _fsync_replace(tmp, path / "design.npz")
+    fault_point("artifact.save.commit")  # crash between arrays and commit
     tmp_manifest = path / "manifest.tmp.json"
     tmp_manifest.write_text(json.dumps(manifest, indent=2, sort_keys=True))
-    tmp_manifest.replace(path / "manifest.json")
+    _fsync_replace(tmp_manifest, path / "manifest.json")
     return path
 
 
-def load_design(path: str | Path, verify: str = "off") -> CompiledDesign:
+def _quarantine(path: Path) -> Path:
+    """Rename a corrupt artifact directory aside (``<name>.quarantined``,
+    numeric suffix on collision) so a cold-start sweep can continue past
+    it while keeping the evidence for a postmortem."""
+    dst = path.with_name(path.name + ".quarantined")
+    n = 1
+    while dst.exists():
+        dst = path.with_name(f"{path.name}.quarantined.{n}")
+        n += 1
+    path.rename(dst)
+    return dst
+
+
+def _corrupt(path: Path, message: str, on_corrupt: str) -> ArtifactCorruptError:
+    """Build (and, if asked, quarantine for) a corruption error."""
+    quarantined_to = None
+    if on_corrupt == "quarantine":
+        try:
+            quarantined_to = _quarantine(path)
+            message += f" (quarantined to {quarantined_to})"
+        except OSError:
+            pass  # read-only store: still raise the typed error
+    return ArtifactCorruptError(message, quarantined_to=quarantined_to)
+
+
+def load_design(
+    path: str | Path, verify: str = "off", on_corrupt: str = "raise"
+) -> CompiledDesign:
     """Rebuild a compiled design from a ``save_design`` artifact.
 
     Cold-starts in milliseconds: no CMVM solves run; instruction tables
@@ -177,25 +261,86 @@ def load_design(path: str | Path, verify: str = "off") -> CompiledDesign:
     severity findings raise ``DesignVerificationError``.  Default off:
     the digest check above already guards integrity, and artifact loads
     sit on serving cold-start paths.
+
+    Damage — torn/truncated ``design.npz``, unparsable or missing-but-
+    committed ``manifest.json``, digest mismatch, dangling array refs —
+    raises :class:`ArtifactCorruptError` (a ``ValueError``).  A wrong
+    *format* or *version* stays a plain ``ValueError``: the file is
+    intact, it just isn't ours.  ``on_corrupt`` ("raise" default /
+    "quarantine") controls what happens first: "quarantine" renames the
+    corrupt directory to ``<name>.quarantined`` (recorded on the
+    error's ``quarantined_to``) so a sweep over an artifact store can
+    catch, log, and continue without tripping on the same entry twice.
     """
+    if on_corrupt not in ("raise", "quarantine"):
+        raise ValueError(f"on_corrupt must be 'raise' or 'quarantine', got {on_corrupt!r}")
     t0 = time.perf_counter()
     path = Path(path)
-    manifest = json.loads((path / "manifest.json").read_text())
-    if manifest.get("format") != FORMAT_NAME:
+    fault_point("artifact.load.read")
+    try:
+        manifest_text = (path / "manifest.json").read_text()
+    except FileNotFoundError:
+        if (path / "design.npz").exists():
+            # arrays landed but the commit record didn't: an interrupted
+            # save, indistinguishable from corruption for the loader
+            raise _corrupt(
+                path,
+                f"{path}: design.npz present but manifest.json missing "
+                "(interrupted save; artifact never committed)",
+                on_corrupt,
+            ) from None
+        raise
+    try:
+        manifest = json.loads(manifest_text)
+    except json.JSONDecodeError as e:
+        raise _corrupt(
+            path, f"{path}: manifest.json is not valid JSON ({e})", on_corrupt
+        ) from e
+    if not isinstance(manifest, dict) or manifest.get("format") != FORMAT_NAME:
         raise ValueError(f"{path}: not a {FORMAT_NAME} artifact")
     if manifest.get("version") != FORMAT_VERSION:
         raise ValueError(
             f"{path}: unsupported artifact version {manifest.get('version')}"
         )
-    with np.load(path / "design.npz", allow_pickle=False) as z:
-        arrays = {k: z[k] for k in z.files}
+    try:
+        with np.load(path / "design.npz", allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise _corrupt(
+            path,
+            f"{path}: manifest.json present but design.npz missing",
+            on_corrupt,
+        ) from None
+    except (zipfile.BadZipFile, OSError, ValueError, EOFError) as e:
+        raise _corrupt(
+            path,
+            f"{path}: design.npz is torn or truncated ({e})",
+            on_corrupt,
+        ) from e
     want = manifest.get("arrays_sha256")
     if want is not None and _arrays_digest(arrays) != want:
-        raise ValueError(
+        raise _corrupt(
+            path,
             f"{path}: design.npz does not match manifest.json "
-            "(corrupt or mixed-generation artifact)"
+            "(corrupt or mixed-generation artifact)",
+            on_corrupt,
         )
 
+    try:
+        return _rebuild(path, manifest, arrays, verify, t0)
+    except KeyError as e:
+        # manifest references an array key the npz does not carry
+        raise _corrupt(
+            path,
+            f"{path}: manifest references missing array {e} "
+            "(corrupt or mixed-generation artifact)",
+            on_corrupt,
+        ) from e
+
+
+def _rebuild(
+    path: Path, manifest: dict, arrays: dict, verify: str, t0: float
+) -> CompiledDesign:
     programs = []
     tables = []
     for i in range(manifest["n_programs"]):

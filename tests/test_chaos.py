@@ -1,0 +1,623 @@
+"""Chaos suite: provoke every failure mode the resilience layer claims
+to handle, deterministically where possible, randomized where the bug
+class is an interleaving.
+
+Covered here:
+
+* :class:`repro.chaos.FaultPlan` itself — seeded replay determinism,
+  rule validation, spec round-trip;
+* per-site unit scenarios — jit-dispatch failure (breaker trip, fast
+  fail, half-open recovery, interpreter fallback), slab-gather failure,
+  dispatcher thread death (supervised restart, budget exhaustion,
+  unsupervised escalation), deadline shedding at the door and at
+  batch-form time, client-timeout accounting;
+* crash-safe artifacts — torn npz, crash-before-commit, crash-between
+  generations (mixed), quarantine-and-continue;
+* the randomized soak — fault schedules over {jit failure, gather
+  failure, thread kill} x {1, 4} shards, asserting the core invariant:
+  **every future resolves (result or typed error) and every slab slot
+  returns to the free list.**
+"""
+
+import time
+from concurrent.futures import TimeoutError as FutureTimeoutError
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.chaos import (
+    FaultInjectedError,
+    FaultPlan,
+    FaultRule,
+    active,
+    plan_from_spec,
+)
+from repro.flow import CompileConfig, ServeConfig, SolverConfig
+from repro.nn import (
+    QDense,
+    QuantConfig,
+    ReLU,
+    compile_model,
+    init_params,
+    numpy_forward_fn,
+)
+from repro.runtime import (
+    ArtifactCorruptError,
+    CircuitOpenError,
+    DeadlineExceededError,
+    ModelUnhealthyError,
+    ServeEngine,
+    load_design,
+    save_design,
+)
+
+IN_QUANT = QuantConfig(8, 4, signed=True)
+
+
+@pytest.fixture(scope="module")
+def design():
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (QDense(8, wq), ReLU(aq), QDense(6, wq))
+    params, _ = init_params(jax.random.PRNGKey(7), model, (8,))
+    return compile_model(
+        model, params, (8,), IN_QUANT,
+        config=CompileConfig(solver=SolverConfig(dc=2)),
+    )
+
+
+@pytest.fixture(scope="module")
+def design2():
+    """A second design with different weights (for mixed-generation
+    artifact tests)."""
+    wq = QuantConfig(6, 2, signed=True)
+    aq = QuantConfig(8, 4, signed=False)
+    model = (QDense(8, wq), ReLU(aq), QDense(6, wq))
+    params, _ = init_params(jax.random.PRNGKey(8), model, (8,))
+    return compile_model(
+        model, params, (8,), IN_QUANT,
+        config=CompileConfig(solver=SolverConfig(dc=2)),
+    )
+
+
+def _samples(n, seed=0, d=8):
+    rng = np.random.default_rng(seed)
+    q = IN_QUANT.qint
+    return np.asarray(rng.integers(q.lo, q.hi + 1, size=(n, d)), np.int32)
+
+
+def _engine(design, **overrides):
+    base = dict(max_batch=8, max_wait_us=0.0, shards=1)
+    base.update(overrides)
+    eng = ServeEngine(config=ServeConfig(**base))
+    eng.register("m", design, warmup=True)
+    return eng
+
+
+def _drain(futures, timeout=10.0):
+    """Resolve every future; returns (results, exceptions) and fails the
+    test if any future hangs past the timeout."""
+    oks, errs = [], []
+    for f in futures:
+        try:
+            exc = f.exception(timeout=timeout)
+        except FutureTimeoutError:
+            pytest.fail("future left hanging past the resolution timeout")
+        (errs if exc is not None else oks).append(exc if exc is not None else f.result(0))
+    return oks, errs
+
+
+def _free_lists_full(eng, name="m"):
+    """The leak invariant: once traffic has drained, every slab slot of
+    every shard — live and retired — is back on the free list."""
+    runner = eng._runner(name)
+    with runner._restart_lock:
+        shards = list(runner._retired) + list(runner.shards)
+    for sh in shards:
+        with sh._lock:
+            assert len(sh._free) == sh.slab.shape[0], (
+                f"shard {sh.idx} (dead={sh.dead}) leaked "
+                f"{sh.slab.shape[0] - len(sh._free)} slab slots"
+            )
+            assert not sh._pending
+
+
+# -- FaultPlan mechanics ---------------------------------------------------
+
+
+def test_fault_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultRule("serve.nonsense")
+    with pytest.raises(ValueError, match="unknown fault mode"):
+        FaultRule("serve.dispatch", mode="explode")
+    with pytest.raises(ValueError, match="rate must be in"):
+        FaultRule("serve.dispatch", rate=1.5)
+    with pytest.raises(ValueError, match="either rate or at"):
+        FaultRule("serve.dispatch", rate=0.5, at=(1,))
+
+
+def test_fault_plan_replays_identically():
+    """Same plan, same seed -> the same fault schedule, independent of
+    reset; a different seed gives a different schedule."""
+    def schedule(plan, n=200):
+        return [plan.check("serve.dispatch") is not None for _ in range(n)]
+
+    p1 = FaultPlan([FaultRule("serve.dispatch", rate=0.3)], seed=42)
+    s1 = schedule(p1)
+    p1.reset()
+    assert schedule(p1) == s1  # exact replay after reset
+    p2 = FaultPlan([FaultRule("serve.dispatch", rate=0.3)], seed=42)
+    assert schedule(p2) == s1  # exact replay across instances
+    p3 = FaultPlan([FaultRule("serve.dispatch", rate=0.3)], seed=43)
+    assert schedule(p3) != s1
+    assert any(s1)  # rate 0.3 over 200 hits fires with p ~ 1
+
+
+def test_fault_plan_per_site_independence():
+    """A site's schedule must not depend on how other sites interleave
+    (per-site RNGs): interleaving a second site's checks between hits
+    leaves the first site's schedule unchanged."""
+    rules = [
+        FaultRule("serve.dispatch", rate=0.3),
+        FaultRule("serve.gather", rate=0.3),
+    ]
+    pure = FaultPlan(rules, seed=9)
+    want = [pure.check("serve.dispatch") is not None for _ in range(100)]
+    mixed = FaultPlan(rules, seed=9)
+    got = []
+    for i in range(100):
+        if i % 3 == 0:
+            mixed.check("serve.gather")
+        got.append(mixed.check("serve.dispatch") is not None)
+    assert got == want
+
+
+def test_fault_plan_at_after_max_fires():
+    plan = FaultPlan(
+        [FaultRule("serve.dispatch", at=(1, 3, 4), after=2, max_fires=1)]
+    )
+    fires = [plan.check("serve.dispatch") is not None for _ in range(6)]
+    # at=1 is masked by after=2; at=3 fires; at=4 is masked by max_fires=1
+    assert fires == [False, False, False, True, False, False]
+    assert plan.stats()["sites"]["serve.dispatch"] == {"hits": 6, "fires": 1}
+
+
+def test_plan_from_spec_round_trip():
+    spec = {
+        "seed": 5,
+        "rules": [
+            {"site": "serve.dispatch", "mode": "raise", "rate": 0.1},
+            {"site": "artifact.save.truncate", "mode": "truncate", "at": [0]},
+        ],
+    }
+    plan = plan_from_spec(spec)
+    assert plan.seed == 5 and len(plan.rules) == 2
+    assert plan_from_spec(plan.to_dict()).to_dict() == plan.to_dict()
+
+
+# -- interpreter fallback path --------------------------------------------
+
+
+def test_numpy_interpreter_bit_exact(design):
+    xs = _samples(64, seed=1)
+    want = np.asarray(design.forward_int(xs))
+    got = numpy_forward_fn(design)(xs)
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+# -- dispatch failures: breaker trip / fast fail / recovery / fallback ----
+
+
+def test_dispatch_fault_fails_future_and_trips_breaker(design):
+    """Two consecutive injected dispatch failures (threshold=2) trip the
+    breaker; with a huge cooldown the next request fails fast with
+    CircuitOpenError instead of touching the jit path."""
+    plan = FaultPlan([FaultRule("serve.dispatch", at=(0, 1))])
+    with active(plan):
+        eng = _engine(
+            design,
+            breaker_threshold=2,
+            breaker_cooldown_ms=60_000.0,
+            breaker_cooldown_max_ms=60_000.0,
+        )
+        try:
+            xs = _samples(3, seed=2)
+            for i in range(2):
+                with pytest.raises(FaultInjectedError):
+                    eng.submit("m", xs[i]).result(10)
+            s = eng.stats("m")
+            assert s["breaker"]["state"] == "open"
+            assert s["breaker"]["n_trips"] == 1
+            with pytest.raises(CircuitOpenError):
+                eng.submit("m", xs[2]).result(10)
+            s = eng.stats("m")
+            assert s["n_fast_failed"] == 1
+            kinds = {e["kind"] for e in s["flight"]["events"]}
+            assert "breaker_open" in kinds
+        finally:
+            eng.shutdown()
+        assert plan.stats()["sites"]["serve.dispatch"]["fires"] == 2
+
+
+def test_breaker_half_open_recovery(design):
+    """After the cooldown the breaker admits one probe; a clean probe
+    closes it and normal service resumes."""
+    plan = FaultPlan([FaultRule("serve.dispatch", at=(0, 1))])
+    with active(plan):
+        eng = _engine(design, breaker_threshold=2, breaker_cooldown_ms=50.0)
+        try:
+            xs = _samples(4, seed=3)
+            want = np.asarray(design.forward_int(xs))
+            for i in range(2):
+                with pytest.raises(FaultInjectedError):
+                    eng.submit("m", xs[i]).result(10)
+            assert eng.stats("m")["breaker"]["state"] == "open"
+            time.sleep(0.08)  # past the cooldown: next batch is the probe
+            np.testing.assert_array_equal(eng.submit("m", xs[2]).result(10), want[2])
+            s = eng.stats("m")
+            assert s["breaker"]["state"] == "closed"
+            assert s["breaker"]["n_recoveries"] == 1
+            np.testing.assert_array_equal(eng.submit("m", xs[3]).result(10), want[3])
+            kinds = {e["kind"] for e in s["flight"]["events"]}
+            assert {"breaker_open", "breaker_closed"} <= kinds
+        finally:
+            eng.shutdown()
+
+
+def test_interpreter_fallback_serves_bit_exact_while_open(design):
+    """With fallback="interpreter" and the jit path failing on every
+    dispatch, all requests are still answered — bit-exactly — through
+    the numpy interpreter, and the breaker sits open."""
+    plan = FaultPlan([FaultRule("serve.dispatch", rate=1.0)])
+    with active(plan):
+        eng = _engine(
+            design,
+            fallback="interpreter",
+            breaker_threshold=2,
+            breaker_cooldown_ms=50.0,
+        )
+        try:
+            xs = _samples(24, seed=4)
+            want = np.asarray(design.forward_int(xs))
+            futs = [eng.submit("m", x) for x in xs]
+            got = np.stack([f.result(10) for f in futs])
+            np.testing.assert_array_equal(got, want)
+            s = eng.stats("m")
+            assert s["breaker"]["state"] == "open"
+            assert s["n_fallback_batches"] > 0
+            assert s["n_requests"] == 24  # nothing failed
+        finally:
+            eng.shutdown()
+
+
+# -- gather failures -------------------------------------------------------
+
+
+def test_gather_fault_fails_batch_but_not_engine(design):
+    """An injected slab-gather failure fails that batch's futures with
+    the fault error — the dispatcher survives, later traffic is served,
+    and no slab slot leaks."""
+    plan = FaultPlan([FaultRule("serve.gather", at=(0,))])
+    with active(plan):
+        eng = _engine(design)
+        try:
+            xs = _samples(5, seed=5)
+            want = np.asarray(design.forward_int(xs))
+            with pytest.raises(FaultInjectedError):
+                eng.submit("m", xs[0]).result(10)
+            for i in range(1, 5):
+                np.testing.assert_array_equal(
+                    eng.submit("m", xs[i]).result(10), want[i]
+                )
+            assert eng.stats("m")["breaker"]["state"] == "closed"
+            _free_lists_full(eng)
+        finally:
+            eng.shutdown()
+
+
+# -- deadlines and client timeouts ----------------------------------------
+
+
+def test_expired_deadline_shed_at_the_door(design):
+    eng = _engine(design)
+    try:
+        f = eng.submit("m", _samples(1, seed=6)[0], deadline_s=0.0)
+        with pytest.raises(DeadlineExceededError):
+            f.result(5)
+        assert eng.stats("m")["n_shed"] == 1
+    finally:
+        eng.shutdown()
+
+
+def test_deadline_shed_at_batch_form(design):
+    """A request whose deadline expires while it waits behind a slow
+    batch is shed at batch-form time instead of executed."""
+    plan = FaultPlan(
+        [FaultRule("serve.dispatch", mode="delay", at=(0,), delay_s=0.3)]
+    )
+    with active(plan):
+        eng = _engine(design)
+        try:
+            xs = _samples(2, seed=7)
+            slow = eng.submit("m", xs[0])  # batch 0: dispatch delayed 300 ms
+            time.sleep(0.05)  # make sure it is in flight before the next
+            doomed = eng.submit("m", xs[1], deadline_s=0.05)
+            assert slow.result(10).shape == (6,)
+            with pytest.raises(DeadlineExceededError):
+                doomed.result(10)
+            assert eng.stats("m")["n_shed"] == 1
+            _free_lists_full(eng)
+        finally:
+            eng.shutdown()
+
+
+def test_config_default_deadline_applies(design):
+    eng = _engine(design, deadline_ms=0.0001)  # ~0: everything expires
+    try:
+        futs = eng.submit_batch("m", _samples(4, seed=8))
+        _, errs = _drain(futs)
+        assert len(errs) == 4
+        assert all(isinstance(e, DeadlineExceededError) for e in errs)
+        assert eng.stats("m")["n_shed"] == 4
+    finally:
+        eng.shutdown()
+
+
+def test_client_timeout_counted_and_work_shed(design):
+    """infer()'s result timeout is tied into the deadline path: the
+    expiry is counted, and the abandoned request was carrying
+    deadline_s=timeout so the dispatcher sheds it rather than executing
+    work nobody is waiting on."""
+    plan = FaultPlan(
+        [FaultRule("serve.dispatch", mode="delay", at=(0,), delay_s=0.4)]
+    )
+    with active(plan):
+        eng = _engine(design)
+        try:
+            xs = _samples(2, seed=9)
+            blocker = eng.submit("m", xs[0])  # occupies the dispatcher
+            time.sleep(0.05)
+            with pytest.raises(FutureTimeoutError):
+                eng.infer("m", xs[1], timeout=0.05)
+            assert blocker.result(10).shape == (6,)
+            s = eng.stats("m")
+            assert s["n_client_timeouts"] == 1
+            assert s["n_shed"] == 1  # the abandoned request was shed, not run
+        finally:
+            eng.shutdown()
+
+
+# -- dispatcher death and supervision -------------------------------------
+
+
+def test_supervised_restart_serves_through_thread_death(design):
+    """A killed dispatcher thread is detected and restarted; submits
+    that race the death retry onto the replacement; restart accounting
+    is visible in stats."""
+    plan = FaultPlan([FaultRule("serve.dispatcher", mode="kill_thread", at=(0,))])
+    with active(plan):
+        eng = _engine(design, supervise=True, restart_budget=2)
+        try:
+            xs = _samples(8, seed=10)
+            want = np.asarray(design.forward_int(xs))
+            # the kill fires on the dispatcher's first loop iteration;
+            # these submits land before/after the revive and must all work
+            futs = [eng.submit("m", x) for x in xs]
+            got = np.stack([f.result(10) for f in futs])
+            np.testing.assert_array_equal(got, want)
+            s = eng.stats("m")
+            sup = s["supervision"]
+            assert sup["healthy"] and sup["n_restarts"] == 1
+            assert sup["n_crashes"] == 1
+            assert any(snap["retired"] for snap in s["shards"])
+            kinds = {e["kind"] for e in s["flight"]["events"]}
+            assert {"shard_crash", "shard_restart"} <= kinds
+            _free_lists_full(eng)
+        finally:
+            eng.shutdown()
+
+
+def test_restart_budget_exhaustion_escalates_unhealthy(design):
+    plan = FaultPlan([FaultRule("serve.dispatcher", mode="kill_thread", at=(0,))])
+    with active(plan):
+        eng = _engine(design, supervise=True, restart_budget=0)
+        try:
+            deadline = time.perf_counter() + 5.0
+            while time.perf_counter() < deadline:
+                if not eng.stats("m")["supervision"]["healthy"]:
+                    break
+                time.sleep(0.02)
+            s = eng.stats("m")
+            assert not s["supervision"]["healthy"]
+            with pytest.raises(ModelUnhealthyError):
+                eng.submit("m", _samples(1, seed=11)[0])
+            kinds = {e["kind"] for e in s["flight"]["events"]}
+            assert "model_unhealthy" in kinds
+        finally:
+            eng.shutdown()
+
+
+def test_unsupervised_crash_fails_fast_and_stop_does_not_hang(design):
+    """With supervision off, a mid-execute thread kill fails the batch's
+    futures with ShardCrashedError, marks the model unhealthy, and a
+    subsequent shutdown returns promptly (no drain-timeout burn waiting
+    on a dead dispatcher) with nothing leaked."""
+    plan = FaultPlan([FaultRule("serve.dispatch", mode="kill_thread", at=(0,))])
+    with active(plan):
+        eng = _engine(design, supervise=False)
+        futs = [eng.submit("m", x) for x in _samples(6, seed=12)]
+        _, errs = _drain(futs, timeout=5.0)
+        assert errs  # at least the killed batch failed
+        assert all(isinstance(e, RuntimeError) for e in errs)
+        assert not eng.stats("m")["supervision"]["healthy"]
+        _free_lists_full(eng)
+        t0 = time.perf_counter()
+        eng.shutdown(timeout=5.0)
+        assert time.perf_counter() - t0 < 3.0  # dead shard skipped, not waited
+
+
+# -- crash-safe artifacts --------------------------------------------------
+
+
+def test_torn_npz_write_is_detected(design, tmp_path):
+    from repro.chaos import FaultRule as R
+
+    plan = FaultPlan([R("artifact.save.truncate", mode="truncate", at=(0,))])
+    with active(plan):
+        save_design(design, tmp_path / "d")
+    with pytest.raises(ArtifactCorruptError):
+        load_design(tmp_path / "d")
+
+
+def test_crash_before_any_write_preserves_previous_artifact(design, tmp_path):
+    path = save_design(design, tmp_path / "d")
+    xs = _samples(4, seed=13)
+    want = np.asarray(design.forward_int(xs))
+    plan = FaultPlan([FaultRule("artifact.save.arrays", at=(0,))])
+    with active(plan):
+        with pytest.raises(FaultInjectedError):
+            save_design(design, path)
+    got = np.asarray(load_design(path).forward_int(xs))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_crash_inside_commit_window_never_commits(design, tmp_path):
+    """Crash between the npz replace and the manifest write: a fresh
+    directory has arrays but no commit record -> typed corruption."""
+    plan = FaultPlan([FaultRule("artifact.save.commit", at=(0,))])
+    with active(plan):
+        with pytest.raises(FaultInjectedError):
+            save_design(design, tmp_path / "d")
+    assert (tmp_path / "d" / "design.npz").exists()
+    assert not (tmp_path / "d" / "manifest.json").exists()
+    with pytest.raises(ArtifactCorruptError, match="never committed"):
+        load_design(tmp_path / "d")
+
+
+def test_mixed_generation_after_partial_resave(design, design2, tmp_path):
+    """A crash mid-resave leaves new arrays under the old manifest; the
+    digest binding catches the mix."""
+    path = save_design(design, tmp_path / "d")
+    plan = FaultPlan([FaultRule("artifact.save.commit", at=(0,))])
+    with active(plan):
+        with pytest.raises(FaultInjectedError):
+            save_design(design2, path)
+    with pytest.raises(ArtifactCorruptError, match="does not match"):
+        load_design(path)
+
+
+def test_quarantine_moves_corrupt_artifact_aside(design, tmp_path):
+    plan = FaultPlan([FaultRule("artifact.save.truncate", mode="truncate", at=(0,))])
+    with active(plan):
+        save_design(design, tmp_path / "d")
+    with pytest.raises(ArtifactCorruptError) as ei:
+        load_design(tmp_path / "d", on_corrupt="quarantine")
+    assert not (tmp_path / "d").exists()
+    q = ei.value.quarantined_to
+    assert q is not None and q.exists() and q.name == "d.quarantined"
+    # the sweep can now retry the name without tripping twice
+    with pytest.raises(FileNotFoundError):
+        load_design(tmp_path / "d", on_corrupt="quarantine")
+
+
+def test_injected_load_read_fault(design, tmp_path):
+    path = save_design(design, tmp_path / "d")
+    plan = FaultPlan([FaultRule("artifact.load.read", at=(0,))])
+    with active(plan):
+        with pytest.raises(FaultInjectedError):
+            load_design(path)
+    assert load_design(path) is not None  # artifact itself is intact
+
+
+# -- metrics surface -------------------------------------------------------
+
+
+def test_resilience_metrics_families_exposed(design):
+    eng = _engine(design)
+    try:
+        eng.submit("m", _samples(1, seed=14)[0]).result(10)
+        text = eng.metrics_text()
+        for family in (
+            "serve_shed_total",
+            "serve_client_timeouts_total",
+            "serve_fallback_batches_total",
+            "serve_fast_failed_total",
+            "serve_breaker_state",
+            "serve_breaker_trips_total",
+            "serve_restarts_total",
+            "serve_healthy",
+        ):
+            assert family in text
+        s = eng.stats("m")
+        assert s["breaker"]["state"] == "closed"
+        assert s["supervision"]["healthy"]
+    finally:
+        eng.shutdown()
+
+
+# -- randomized soak -------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [1, 4])
+def test_chaos_soak_every_future_resolves(design, shards):
+    """Randomized fault schedule over {jit failure, gather failure,
+    thread kill} x {1, 4} shards, with the interpreter fallback armed:
+    every future resolves (result or typed error), results that arrive
+    are bit-exact, and every slab slot returns to the free list."""
+    plan = FaultPlan(
+        [
+            FaultRule("serve.dispatch", rate=0.05),
+            FaultRule("serve.gather", rate=0.02),
+            FaultRule(
+                "serve.dispatcher", mode="kill_thread", rate=0.02, max_fires=2
+            ),
+        ],
+        seed=1234,
+    )
+    with active(plan):
+        eng = ServeEngine(
+            config=ServeConfig(
+                max_batch=8,
+                max_wait_us=200.0,
+                shards=shards,
+                fallback="interpreter",
+                breaker_threshold=4,
+                breaker_cooldown_ms=20.0,
+                supervise=True,
+                restart_budget=4,
+            )
+        )
+        eng.register("m", design, warmup=True)
+        try:
+            xs = _samples(240, seed=15)
+            want = np.asarray(design.forward_int(xs))
+            futs = []
+            for i in range(0, 240, 12):
+                chunk = xs[i : i + 12]
+                if (i // 12) % 3 == 0:
+                    futs.extend(eng.submit_batch("m", chunk))
+                else:
+                    futs.extend(eng.submit("m", x) for x in chunk)
+            oks = errs = 0
+            for i, f in enumerate(futs):
+                try:
+                    exc = f.exception(timeout=15.0)
+                except FutureTimeoutError:
+                    pytest.fail(f"future {i} hung under chaos")
+                if exc is None:
+                    np.testing.assert_array_equal(f.result(0), want[i])
+                    oks += 1
+                else:
+                    assert isinstance(exc, RuntimeError), exc
+                    errs += 1
+            assert oks + errs == 240
+            assert oks > 0  # the engine kept serving through the faults
+            _free_lists_full(eng)
+            s = eng.stats("m")
+            assert s["supervision"]["n_crashes"] <= 2  # max_fires bound
+        finally:
+            eng.shutdown()
+        assert plan.stats()["sites"]["serve.dispatch"]["hits"] > 0

@@ -241,6 +241,7 @@ def test_flight_ring_wraparound_and_slowest_k():
 def test_flight_merged_over_empty_and_mixed():
     assert FlightRecorder.merged([]) == {
         "n_records": 0, "capacity": 0, "n_evicted": 0, "slowest": [],
+        "n_events": 0, "events": [],
     }
     empty = FlightRecorder(capacity=4, slow_k=2)
     busy = FlightRecorder(capacity=4, slow_k=2)
